@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: dataset cache + timing helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+ART = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+
+
+def art_path(name: str) -> str:
+    os.makedirs(ART, exist_ok=True)
+    return os.path.join(ART, name)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, seconds_per_call) — median of ``repeats``."""
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return out, ts[len(ts) // 2]
+
+
+_DATASET_CACHE: Dict[str, list] = {}
+
+
+def bench_dataset(n_graphs: int = 240, seed: int = 0):
+    """Build (or reuse) the benchmark dataset, with convnext held out."""
+    key = f"{n_graphs}-{seed}"
+    if key in _DATASET_CACHE:
+        return _DATASET_CACHE[key]
+    from repro.dataset.builder import build_dataset
+    recs = build_dataset(n_graphs=n_graphs, seed=seed,
+                         extra_families=("convnext",))
+    _DATASET_CACHE[key] = recs
+    return recs
+
+
+def write_json(name: str, obj) -> str:
+    p = art_path(name)
+    with open(p, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return p
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    p = art_path(name)
+    if rows:
+        cols = list(rows[0].keys())
+        with open(p, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for r in rows:
+                f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    return p

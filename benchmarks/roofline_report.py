@@ -1,0 +1,50 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch × shape)
+three-term roofline table, plus DIPPM-vs-compiled cross-validation."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import write_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run(mesh_kind: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh_kind") != mesh_kind:
+            continue
+        roof = rec.get("roofline", {})
+        status = rec.get("status", "?")
+        dom = roof.get("dominant", "-")
+        terms = {k: roof.get(f"{k}_s", 0.0)
+                 for k in ("compute", "memory", "collective")}
+        dom_t = max(terms.values()) if terms else 0.0
+        # roofline fraction: useful model-flops time / dominant term
+        mf = rec.get("model_flops_per_device", 0.0)
+        ideal_s = mf / 197e12
+        frac = (ideal_s / dom_t) if dom_t > 0 else None
+        rows.append({
+            "arch": rec.get("arch"), "shape": rec.get("shape"),
+            "kind": rec.get("kind"), "status": status,
+            "mem_gb_per_dev": round(rec.get("memory", {}).get(
+                "peak_bytes_per_device", 0) / 1e9, 2),
+            "compute_s": f"{terms['compute']:.3e}",
+            "memory_s": f"{terms['memory']:.3e}",
+            "collective_s": f"{terms['collective']:.3e}",
+            "dominant": dom,
+            "model_flops_per_dev": f"{mf:.3e}",
+            "useful_flop_ratio": round(
+                rec.get("useful_flop_ratio", 0) or 0, 3),
+            "roofline_fraction": round(frac, 4) if frac else "",
+        })
+    path = write_csv(f"roofline_{mesh_kind}.csv", rows)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"].startswith("skip"))
+    fail = len(rows) - ok - skip
+    return {"cells": len(rows), "ok": ok, "skips": skip, "failed": fail,
+            "artifact": path}

@@ -1,0 +1,58 @@
+"""Paper Tables 3+4: GNN-variant comparison (GraphSAGE / GCN / GAT / GIN /
+MLP) under the paper's settings — hidden 512, dropout 0.05, Adam, Huber,
+70/15/15 split, MAPE metric. ``--epochs`` reproduces the 10-epoch
+comparison; the headline long run uses more epochs + the tuned LR.
+"""
+from __future__ import annotations
+
+from repro.core.gnn import PMGNSConfig
+from repro.dataset.builder import records_to_samples, split_dataset
+from repro.train.gnn_trainer import TrainConfig, evaluate, train_pmgns
+
+from .common import bench_dataset, write_csv, write_json
+
+VARIANTS = ("graphsage", "gcn", "gat", "gin", "mlp")
+
+
+def run(n_graphs: int = 240, epochs: int = 10, hidden: int = 512,
+        lr: float = 2.754e-5, seed: int = 0, variants=VARIANTS,
+        lr_boost: float = 100.0):
+    """The paper trains 10 epochs at lr=2.754e-5 on 10.5k graphs ≈ 2300
+    steps/epoch. At CI scale (~50 steps/epoch) the same step budget needs
+    a proportionally larger lr — ``lr_boost`` rescales so optimizer work
+    per epoch is comparable. Set ``lr_boost=1`` for the literal setting.
+    """
+    recs = bench_dataset(n_graphs, seed)
+    sp = split_dataset(recs, seed=seed)
+    train = records_to_samples(sp["train"])
+    val = records_to_samples(sp["val"])
+    test = records_to_samples(sp["test"])
+
+    rows = []
+    history = {}
+    for variant in variants:
+        cfg = PMGNSConfig(variant=variant, hidden=hidden)
+        params, hist = train_pmgns(
+            cfg, train, val,
+            TrainConfig(epochs=epochs, batch_size=32, lr=lr * lr_boost,
+                        seed=seed))
+        m_tr = evaluate(params, cfg, train)
+        m_va = evaluate(params, cfg, val)
+        m_te = evaluate(params, cfg, test)
+        rows.append({
+            "model": variant,
+            "train_mape": round(m_tr["mape"], 4),
+            "val_mape": round(m_va["mape"], 4),
+            "test_mape": round(m_te["mape"], 4),
+            "test_mape_latency": round(m_te["mape_latency"], 4),
+            "test_mape_energy": round(m_te["mape_energy"], 4),
+            "test_mape_memory": round(m_te["mape_memory"], 4),
+        })
+        history[variant] = hist
+        print(f"[table4] {variant:10s} train={m_tr['mape']:.3f} "
+              f"val={m_va['mape']:.3f} test={m_te['mape']:.3f}", flush=True)
+    path = write_csv("table4_gnn.csv", rows)
+    write_json("table4_history.json", history)
+    best = min(rows, key=lambda r: r["test_mape"])
+    return {"rows": rows, "best": best["model"],
+            "best_test_mape": best["test_mape"], "artifact": path}

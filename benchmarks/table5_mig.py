@@ -1,0 +1,59 @@
+"""Paper Table 5: MIG-profile prediction for seen / partially-seen /
+unseen architectures (+ the TPU-slice analogue).
+
+Seen = test-split members of training families; unseen = convnext (held
+out of training entirely, like the paper).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.gnn import PMGNSConfig
+from repro.core.mig import predict_mig, predict_tpu_slice, mig_utilization
+from repro.dataset.builder import records_to_samples, split_dataset
+from repro.train.gnn_trainer import TrainConfig, predict_batch, train_pmgns
+
+from .common import bench_dataset, write_csv
+
+
+def run(n_graphs: int = 240, epochs: int = 12, seed: int = 0,
+        hidden: int = 512, lr: float = 2.754e-5 * 100):
+    recs = bench_dataset(n_graphs, seed)
+    sp = split_dataset(recs, seed=seed)
+    cfg = PMGNSConfig(hidden=hidden)
+    params, _ = train_pmgns(
+        cfg, records_to_samples(sp["train"]),
+        records_to_samples(sp["val"]),
+        TrainConfig(epochs=epochs, batch_size=32, lr=lr, seed=seed))
+
+    rows = []
+    correct = {"seen": [0, 0], "unseen": [0, 0]}
+    for tag, recset in (("seen", sp["test"][:12]), ("unseen", sp["unseen"])):
+        if not recset:
+            continue
+        samples = records_to_samples(recset)
+        preds = predict_batch(params, cfg, samples)
+        for r, p in zip(recset, preds):
+            pred_mem, act_mem = float(p[2]), float(r.y[2])
+            pred_prof = predict_mig(pred_mem)
+            act_prof = predict_mig(act_mem)
+            ok = pred_prof == act_prof
+            correct[tag][0] += int(ok)
+            correct[tag][1] += 1
+            util = mig_utilization(act_mem)
+            rows.append({
+                "model": f"{r.family}-{r.meta.get('res', '')}",
+                "batch": r.meta.get("batch", ""),
+                "seen": tag,
+                "pred_mig": pred_prof, "actual_mig": act_prof,
+                "pred_mem_mb": round(pred_mem, 0),
+                "actual_mem_mb": round(act_mem, 0),
+                "match": ok,
+                "pred_tpu_slice": predict_tpu_slice(pred_mem),
+                "best_util": (f"{util[0][0]}:{util[0][1]:.0%}"
+                              if util else ""),
+            })
+    path = write_csv("table5_mig.csv", rows)
+    acc = {k: (v[0] / v[1] if v[1] else None)
+           for k, v in correct.items()}
+    return {"rows": rows[:8], "accuracy": acc, "artifact": path}

@@ -1,0 +1,61 @@
+"""Rapid design-space exploration with DIPPM (paper §1: "helps to perform
+rapid design-space exploration for the inference performance of a model").
+
+Sweeps a ViT family over (depth × width × batch), predicts latency /
+memory for every point WITHOUT running any of them, and prints the
+Pareto-optimal configurations under a memory budget.
+
+    PYTHONPATH=src python examples/design_space_exploration.py
+"""
+import itertools
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as S
+
+from repro.core import DIPPM, PMGNSConfig
+from repro.core.frontends import from_jax
+from repro.dataset.builder import (build_dataset, records_to_samples,
+                                   split_dataset)
+from repro.train.gnn_trainer import TrainConfig, train_pmgns
+from repro.zoo.families import build_family
+
+
+def main():
+    recs = build_dataset(n_graphs=150, seed=1)
+    sp = split_dataset(recs, seed=1)
+    cfg = PMGNSConfig(hidden=128)
+    params, _ = train_pmgns(
+        cfg, records_to_samples(sp["train"]),
+        records_to_samples(sp["val"]),
+        TrainConfig(epochs=8, batch_size=16, lr=5e-3))
+    dippm = DIPPM.from_params(params, cfg)
+
+    budget_mb = 5 * 1024.0       # must fit a 1g.5gb MIG instance
+    points = []
+    for depth, dim, batch in itertools.product(
+            [6, 8, 12], [192, 384, 768], [1, 8, 32]):
+        specs, fwd, meta = build_family(
+            "vit", {"depth": depth, "dim": dim, "batch": batch,
+                    "res": 224})
+        pred = dippm.predict_jax(
+            fwd, specs, S((batch, 224, 224, 3), jnp.float32),
+            batch=batch, meta=meta)
+        points.append(((depth, dim, batch), pred))
+
+    feasible = [(k, p) for k, p in points if p.memory_mb < budget_mb]
+    # pareto: lowest latency per (depth·dim) capacity proxy
+    feasible.sort(key=lambda kp: kp[1].latency_ms)
+    print(f"{len(feasible)}/{len(points)} configs fit under "
+          f"{budget_mb:.0f} MB (1g.5gb)\n")
+    print("depth dim  batch   latency_ms  memory_mb  mig       tpu_slice")
+    pareto_cap = 0
+    for (d, w, b), p in feasible:
+        cap = d * w
+        if cap > pareto_cap:     # larger model at this latency rank
+            pareto_cap = cap
+            print(f"{d:4d} {w:5d} {b:4d}   {p.latency_ms:9.3f} "
+                  f"{p.memory_mb:9.1f}  {str(p.mig):8s} {p.tpu_slice}")
+
+
+if __name__ == "__main__":
+    main()

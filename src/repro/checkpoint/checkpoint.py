@@ -1,0 +1,163 @@
+"""Sharded, atomic, async-capable checkpointing.
+
+Design (scaled-down orbax): one directory per step,
+``step_<N>/shard_<H>.npz`` per host plus a ``manifest.json`` written
+LAST — a checkpoint is valid iff its manifest exists (atomic commit), so
+a mid-write failure leaves only ignorable garbage. Restore can RESHARD:
+arrays are saved unsharded per-host (host-local slices concatenated
+logically by the manifest), so a checkpoint written on a 512-chip mesh
+restores onto 256 chips (elastic downscale) or a laptop.
+
+On this single-process container every array is fully addressable, so
+"host shard" degenerates to one file — the layout and commit protocol are
+what the tests exercise (including crash-mid-write and reshard-restore).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in leaves:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _tree_structure_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(path: str, step: int, state: Any,
+                    host_id: int = 0, n_hosts: int = 1) -> str:
+    """Write ``state`` (pytree) for ``step``; manifest commits atomically."""
+    step_dir = os.path.join(path, f"step_{step:010d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten(state)
+    shard_file = os.path.join(step_dir, f"shard_{host_id:05d}.npz")
+    tmp = shard_file + ".tmp"
+    with open(tmp, "wb") as f:  # np.savez(path) appends ".npz" — use a fh
+        np.savez(f, **{k.replace("/", "__"): v for k, v in flat.items()})
+    os.replace(tmp, shard_file)
+
+    if host_id == 0:
+        manifest = {
+            "step": step,
+            "n_hosts": n_hosts,
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "time": time.time(),
+        }
+        mtmp = os.path.join(step_dir, "manifest.json.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, os.path.join(step_dir, "manifest.json"))
+    return step_dir
+
+
+def latest_step(path: str) -> Optional[int]:
+    """Highest step with a committed manifest (ignores torn writes)."""
+    if not os.path.isdir(path):
+        return None
+    best = None
+    for name in os.listdir(path):
+        if not name.startswith("step_"):
+            continue
+        if not os.path.exists(os.path.join(path, name, "manifest.json")):
+            continue  # uncommitted / torn
+        try:
+            s = int(name.split("_")[1])
+        except ValueError:
+            continue
+        best = s if best is None or s > best else best
+    return best
+
+
+def restore_checkpoint(path: str, step: Optional[int], like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (a pytree of NamedSharding) — this is the reshard path:
+    the same bytes lay out onto whatever mesh the new job runs."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {path}")
+    step_dir = os.path.join(path, f"step_{step:010d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data: Dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(step_dir)):
+        if name.startswith("shard_") and name.endswith(".npz"):
+            blob = np.load(os.path.join(step_dir, name))
+            for k in blob.files:
+                data[k.replace("__", "/")] = blob[k]
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    for kp, leaf in leaves:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key}")
+        arr = data[key]
+        out_leaves.append(arr)
+    restored = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored
+
+
+class CheckpointManager:
+    """Step-addressed manager: keep-last-k GC + async save thread."""
+
+    def __init__(self, path: str, keep: int = 3, save_async: bool = True):
+        self.path = path
+        self.keep = keep
+        self.save_async = save_async
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(path, exist_ok=True)
+
+    def save(self, step: int, state: Any) -> None:
+        # snapshot to host memory synchronously (cheap), write async
+        flat_np = jax.tree_util.tree_map(np.asarray, state)
+        if self.save_async:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save_and_gc, args=(step, flat_np), daemon=True)
+            self._thread.start()
+        else:
+            self._save_and_gc(step, flat_np)
+
+    def _save_and_gc(self, step: int, state: Any) -> None:
+        save_checkpoint(self.path, step, state)
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.path)
+            if n.startswith("step_") and os.path.exists(
+                os.path.join(self.path, n, "manifest.json")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> tuple[Any, Optional[int]]:
+        step = latest_step(self.path)
+        if step is None:
+            return like, None
+        self.wait()
+        return restore_checkpoint(self.path, step, like, shardings), step

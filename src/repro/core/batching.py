@@ -1,0 +1,137 @@
+"""Padded graph batching for TPU-friendly GNN training.
+
+GPU GNN stacks (PyTorch-Geometric) batch graphs as one big sparse
+block-diagonal adjacency + gather/scatter. On TPU the efficient layout is
+**dense padded batches**: every graph is padded to a bucket size ``N`` and
+the batch is ``[B, N, ...]`` with a node mask — aggregation becomes a batched
+dense matmul that runs on the MXU (see ``repro.kernels.sage_spmm``).
+
+Buckets keep padding waste bounded: a graph goes to the smallest bucket that
+fits; batches are formed within buckets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .ir import OpGraph
+from .node_features import NODE_FEATURE_DIM, node_feature_matrix
+from .static_features import static_features
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (32, 64, 128, 256, 512, 1024)
+
+
+@dataclasses.dataclass
+class GraphSample:
+    """One dataset point: (A, X, F_s, Y) — paper §4.1."""
+
+    x: np.ndarray           # [N, 32] node features
+    adj: np.ndarray         # [N, N]  A[dst, src]
+    mask: np.ndarray        # [N]     1 for real nodes
+    static: np.ndarray      # [5] or [8]
+    y: Optional[np.ndarray]  # [3] (latency_ms, energy_j, memory_mb) or None
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.mask.sum())
+
+
+def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def sample_from_graph(
+    g: OpGraph,
+    y: Optional[np.ndarray] = None,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    extended_static: bool = False,
+) -> GraphSample:
+    """Pad one OpGraph into a fixed-size GraphSample.
+
+    Graphs larger than the top bucket are truncated to the *heaviest* nodes
+    (by flops) with totals preserved in the static features — rare, and the
+    static features still see the whole graph.
+    """
+    x = node_feature_matrix(g)
+    n = x.shape[0]
+    cap = buckets[-1]
+    keep = None
+    if n > cap:
+        order = np.argsort([-nd.flops for nd in g.nodes], kind="stable")
+        keep = np.sort(order[:cap])
+        remap = {int(old): i for i, old in enumerate(keep)}
+        x = x[keep]
+        n = cap
+    size = bucket_for(n, buckets)
+
+    adj = np.zeros((size, size), dtype=np.float32)
+    for s, d in g.edges:
+        if keep is not None:
+            if s not in remap or d not in remap:
+                continue
+            s, d = remap[s], remap[d]
+        adj[d, s] = 1.0
+
+    xp = np.zeros((size, x.shape[1]), dtype=np.float32)
+    xp[:n] = x
+    mask = np.zeros((size,), dtype=np.float32)
+    mask[:n] = 1.0
+    return GraphSample(
+        x=xp, adj=adj, mask=mask,
+        static=static_features(g, extended=extended_static),
+        y=None if y is None else np.asarray(y, dtype=np.float32),
+        meta=dict(g.meta),
+    )
+
+
+def collate(samples: Sequence[GraphSample]) -> Dict[str, np.ndarray]:
+    """Stack same-bucket samples into one batch dict (jit-ready arrays)."""
+    sizes = {s.x.shape[0] for s in samples}
+    if len(sizes) != 1:
+        raise ValueError(f"collate needs a single bucket size, got {sizes}")
+    batch = {
+        "x": np.stack([s.x for s in samples]),
+        "adj": np.stack([s.adj for s in samples]),
+        "mask": np.stack([s.mask for s in samples]),
+        "static": np.stack([s.static for s in samples]),
+    }
+    if all(s.y is not None for s in samples):
+        batch["y"] = np.stack([s.y for s in samples])
+    return batch
+
+
+def batches_by_bucket(
+    samples: Sequence[GraphSample],
+    batch_size: int,
+    rng: Optional[np.random.Generator] = None,
+    drop_remainder: bool = False,
+) -> List[Dict[str, np.ndarray]]:
+    """Group samples into per-bucket shuffled batches.
+
+    Per-bucket batch size is scaled down for big buckets so the padded
+    [B, N, N] adjacency stays within a constant memory envelope.
+    """
+    by_bucket: Dict[int, List[GraphSample]] = {}
+    for s in samples:
+        by_bucket.setdefault(s.x.shape[0], []).append(s)
+    out: List[Dict[str, np.ndarray]] = []
+    base_cells = batch_size * 256 * 256
+    for size, group in sorted(by_bucket.items()):
+        bs = max(1, min(batch_size, base_cells // (size * size)))
+        idx = np.arange(len(group))
+        if rng is not None:
+            rng.shuffle(idx)
+        for i in range(0, len(group), bs):
+            chunk = [group[j] for j in idx[i:i + bs]]
+            if drop_remainder and len(chunk) < bs:
+                continue
+            out.append(collate(chunk))
+    if rng is not None:
+        rng.shuffle(out)  # type: ignore[arg-type]
+    return out

@@ -1,0 +1,94 @@
+"""Multi-framework frontends (paper §3.1 — "Relay Parser").
+
+The paper parses PyTorch / TensorFlow / ONNX / PaddlePaddle through TVM
+Relay. In this offline TPU port the two frontends are:
+
+* :func:`from_jax` — any JAX callable (all assigned architectures, the
+  model zoo, user models) via abstract jaxpr tracing.
+* :func:`from_json` / :func:`from_json_file` — the **portable serialized
+  graph schema** (``repro.opgraph.v1``): any external framework exporter
+  that can emit a node list with ``op / out_shape / attrs`` (an ONNX walker
+  is ~40 lines in that framework's environment) is parseable without that
+  framework being importable here. This keeps the paper's multi-framework
+  property architectural rather than dependency-bound.
+
+Both produce the same :class:`~repro.core.ir.OpGraph`, so the rest of the
+pipeline (NFG → SFG → PMGNS → MIG) is frontend-agnostic, exactly as in the
+paper's Fig. 2.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional
+
+from .ir import OP_INDEX, OpGraph, OpNode, filter_and_preprocess
+from .tracer import trace_graph
+
+#: aliases accepted from external exporters → canonical OP_VOCAB names
+_OP_ALIASES: Dict[str, str] = {
+    "matmul": "dense", "gemm": "dense", "linear": "dense", "dense": "dense",
+    "batch_matmul": "dense", "fc": "dense", "einsum": "dense",
+    "conv1d": "conv", "conv2d": "conv", "conv3d": "conv",
+    "conv2d_transpose": "conv", "depthwise_conv2d": "conv", "conv": "conv",
+    "bias_add": "add", "add": "add", "sub": "add", "residual": "add",
+    "mul": "mul", "div": "div",
+    "relu": "relu", "relu6": "relu", "leaky_relu": "relu", "prelu": "relu",
+    "clip": "relu", "hardswish": "gelu", "hardsigmoid": "gelu",
+    "gelu": "gelu", "silu": "gelu", "swish": "gelu", "sigmoid": "gelu",
+    "mish": "gelu", "elu": "gelu",
+    "tanh": "tanh", "exp": "exp", "log": "exp",
+    "softmax": "softmax", "log_softmax": "softmax",
+    "sum": "reduce", "mean": "reduce", "reduce_mean": "reduce",
+    "global_avg_pool2d": "pool", "avg_pool2d": "pool", "max_pool2d": "pool",
+    "adaptive_avg_pool2d": "pool", "pool": "pool",
+    "batch_norm": "norm", "layer_norm": "norm", "group_norm": "norm",
+    "instance_norm": "norm", "rms_norm": "norm", "norm": "norm",
+    "embedding": "gather", "gather": "gather", "take": "gather",
+    "scatter": "scatter", "one_hot": "scatter",
+    "reduce": "reduce", "elementwise": "elementwise",
+}
+
+
+def from_jax(fn, params_spec, *data_specs, meta=None,
+             max_scan_iters: int = 64) -> OpGraph:
+    """Trace a JAX callable into an OpGraph (see ``repro.core.tracer``)."""
+    return trace_graph(fn, params_spec, *data_specs, meta=meta,
+                       max_scan_iters=max_scan_iters)
+
+
+def from_json(doc: Dict[str, Any]) -> OpGraph:
+    """Parse the portable schema (or a raw exporter node list) to OpGraph."""
+    if doc.get("schema") == "repro.opgraph.v1":
+        g = OpGraph.from_json(doc)
+        # re-canonicalize op names from foreign exporters
+        raw = []
+        for nd in g.nodes:
+            op = nd.op if nd.op in OP_INDEX else _OP_ALIASES.get(nd.op.lower())
+            if op is None:
+                op = "elementwise"
+            nd.op = op
+            raw.append(nd)
+        return filter_and_preprocess(raw, g.edges, meta=g.meta)
+    # raw exporter format: {"nodes": [{"id", "op", "out_shape", ...}],
+    #                       "edges": [[s,d],...], "meta": {...}}
+    nodes = []
+    for d in doc["nodes"]:
+        op = str(d["op"]).lower()
+        op = _OP_ALIASES.get(op, op if op in OP_INDEX else "elementwise")
+        nodes.append(OpNode(
+            node_id=int(d["id"]), op=op,
+            out_shape=tuple(int(x) for x in d.get("out_shape", ())),
+            dtype=str(d.get("dtype", "float32")),
+            attrs=dict(d.get("attrs", {})),
+            flops=float(d.get("flops", 0.0)),
+            macs=float(d.get("macs", 0.0)),
+            bytes_accessed=float(d.get("bytes_accessed", 0.0)),
+            param_bytes=float(d.get("param_bytes", 0.0)),
+        ))
+    edges = [(int(a), int(b)) for a, b in doc.get("edges", [])]
+    return filter_and_preprocess(nodes, edges, meta=doc.get("meta", {}))
+
+
+def from_json_file(path: str) -> OpGraph:
+    with open(path) as f:
+        return from_json(json.load(f))

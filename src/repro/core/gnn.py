@@ -1,0 +1,251 @@
+"""Performance Model Graph Network Structure (paper §3.4) + GNN baselines.
+
+The PMGNS is: 3 × GraphSAGE blocks → graph readout → ``z ⊕ F_s`` →
+3 × FC blocks → 3-way multi-regression head (memory MB, latency ms,
+energy J). Table 4 baselines — GCN, GAT, GIN, and a no-GNN MLP — share the
+same skeleton with the message-passing layer swapped, exactly the paper's
+ablation design.
+
+All layers operate on **padded dense batches** (``repro.core.batching``):
+
+    x     [B, N, F]     node features
+    adj   [B, N, N]     A[dst, src]
+    mask  [B, N]        node validity
+
+Dense-batched aggregation is a *batched matmul* — the TPU-native layout
+(MXU) — and its hot inner product is available as a Pallas kernel
+(``repro.kernels.sage_spmm``) selected via ``use_pallas=True``.
+
+Targets are trained in ``log1p`` space (they span 4+ orders of magnitude);
+:func:`decode_targets` maps predictions back to physical units.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+Params = Dict[str, Any]
+
+TARGET_NAMES = ("latency_ms", "energy_j", "memory_mb")
+N_TARGETS = 3
+
+
+# ---------------------------------------------------------------------------
+# aggregation helpers (dense, masked)
+# ---------------------------------------------------------------------------
+
+def _neighbor_mean(adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """mean_{j in N(i)} h_j  via row-normalized dense adjacency."""
+    deg = jnp.maximum(adj.sum(axis=-1, keepdims=True), 1.0)
+    return jnp.einsum("bnm,bmf->bnf", adj / deg, h)
+
+
+def _neighbor_sum(adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bnm,bmf->bnf", adj, h)
+
+
+def _gcn_norm_adj(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """D^-1/2 (A + I) D^-1/2 with masked self-loops."""
+    eye = jnp.eye(adj.shape[-1], dtype=adj.dtype)[None]
+    a = adj + eye * mask[:, :, None]
+    deg = jnp.maximum(a.sum(axis=-1), 1.0)
+    dinv = jax.lax.rsqrt(deg)
+    return a * dinv[:, :, None] * dinv[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# message-passing layers
+# ---------------------------------------------------------------------------
+
+def sage_layer_init(key, d_in: int, d_out: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"self": nn.linear_init(k1, d_in, d_out),
+            "neigh": nn.linear_init(k2, d_in, d_out, bias=False)}
+
+
+def sage_layer(p: Params, x, adj, mask, *, use_pallas: bool = False):
+    if use_pallas:
+        from ..kernels.ops import sage_aggregate
+        agg = sage_aggregate(adj, x)
+    else:
+        agg = _neighbor_mean(adj, x)
+    y = nn.linear(p["self"], x) + nn.linear(p["neigh"], agg)
+    return y * mask[..., None]
+
+
+def gcn_layer_init(key, d_in: int, d_out: int) -> Params:
+    return {"lin": nn.linear_init(key, d_in, d_out)}
+
+
+def gcn_layer(p: Params, x, adj, mask, **_):
+    a = _gcn_norm_adj(adj, mask)
+    y = nn.linear(p["lin"], jnp.einsum("bnm,bmf->bnf", a, x))
+    return y * mask[..., None]
+
+
+def gat_layer_init(key, d_in: int, d_out: int, heads: int = 4) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dh = d_out // heads
+    return {
+        "proj": nn.linear_init(k1, d_in, d_out, bias=False),
+        "att_src": nn.normal_init(k2, (heads, dh)),
+        "att_dst": nn.normal_init(k3, (heads, dh)),
+    }
+
+
+def gat_layer(p: Params, x, adj, mask, **_):
+    h = p["att_src"].shape[0]
+    z = nn.linear(p["proj"], x)                       # [B,N,D]
+    B, N, D = z.shape
+    zh = z.reshape(B, N, h, D // h)
+    es = jnp.einsum("bnhd,hd->bnh", zh, p["att_src"])  # source score
+    ed = jnp.einsum("bnhd,hd->bnh", zh, p["att_dst"])  # dest score
+    # e[b, i, j, h] — attention of dst i over src j
+    e = jax.nn.leaky_relu(ed[:, :, None, :] + es[:, None, :, :], 0.2)
+    neg = jnp.finfo(z.dtype).min
+    e = jnp.where((adj > 0)[..., None], e, neg)
+    att = jax.nn.softmax(e, axis=2)
+    att = jnp.where((adj > 0)[..., None], att, 0.0)
+    out = jnp.einsum("bijh,bjhd->bihd", att, zh).reshape(B, N, D)
+    return out * mask[..., None]
+
+
+def gin_layer_init(key, d_in: int, d_out: int) -> Params:
+    return {"mlp": nn.mlp_init(key, (d_in, d_out, d_out)),
+            "eps": jnp.zeros(())}
+
+
+def gin_layer(p: Params, x, adj, mask, **_):
+    agg = _neighbor_sum(adj, x)
+    y = nn.mlp(p["mlp"], (1.0 + p["eps"]) * x + agg)
+    return y * mask[..., None]
+
+
+def mlp_layer_init(key, d_in: int, d_out: int) -> Params:
+    return {"lin": nn.linear_init(key, d_in, d_out)}
+
+
+def mlp_layer(p: Params, x, adj, mask, **_):
+    """No message passing — the paper's plain-MLP baseline."""
+    return nn.linear(p["lin"], x) * mask[..., None]
+
+
+_LAYERS = {
+    "graphsage": (sage_layer_init, sage_layer),
+    "gcn": (gcn_layer_init, gcn_layer),
+    "gat": (gat_layer_init, gat_layer),
+    "gin": (gin_layer_init, gin_layer),
+    "mlp": (mlp_layer_init, mlp_layer),
+}
+
+
+# ---------------------------------------------------------------------------
+# PMGNS model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PMGNSConfig:
+    """Paper Table 3 settings."""
+
+    variant: str = "graphsage"       # graphsage | gcn | gat | gin | mlp
+    node_feat_dim: int = 32
+    static_dim: int = 5
+    hidden: int = 512                # "Nr hidden layers 512"
+    n_gnn_blocks: int = 3            # Fig. 2: three graphSAGE blocks
+    n_fc_blocks: int = 3             # Fig. 2: three FC blocks
+    dropout: float = 0.05
+    n_targets: int = N_TARGETS
+    readout: str = "mean_max"        # graph-level pooling
+    use_pallas: bool = False
+
+
+def pmgns_init(key, cfg: PMGNSConfig) -> Params:
+    layer_init, _ = _LAYERS[cfg.variant]
+    keys = jax.random.split(key, cfg.n_gnn_blocks + cfg.n_fc_blocks + 1)
+    p: Params = {"gnn": {}, "fc": {}}
+    d = cfg.node_feat_dim
+    for i in range(cfg.n_gnn_blocks):
+        p["gnn"][f"b{i}"] = layer_init(keys[i], d, cfg.hidden)
+        d = cfg.hidden
+    pool_mult = 2 if cfg.readout == "mean_max" else 1
+    d_in = cfg.hidden * pool_mult + cfg.static_dim
+    for i in range(cfg.n_fc_blocks):
+        last = i == cfg.n_fc_blocks - 1
+        d_out = cfg.n_targets if last else cfg.hidden
+        p["fc"][f"b{i}"] = nn.linear_init(
+            keys[cfg.n_gnn_blocks + i], d_in, d_out)
+        d_in = d_out
+    return p
+
+
+def _readout(h: jnp.ndarray, mask: jnp.ndarray, kind: str) -> jnp.ndarray:
+    m = mask[..., None]
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)[..., None]
+    mean = (h * m).sum(axis=1, keepdims=True) / denom
+    mean = mean[:, 0]
+    if kind == "mean":
+        return mean
+    mx = jnp.where(m > 0, h, jnp.finfo(h.dtype).min).max(axis=1)
+    mx = jnp.where(mask.sum(axis=1, keepdims=True) > 0, mx, 0.0)
+    return jnp.concatenate([mean, mx], axis=-1)
+
+
+def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
+                *, train: bool = False,
+                rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Forward pass → [B, n_targets] predictions in log1p space."""
+    _, layer = _LAYERS[cfg.variant]
+    x, adj, mask = batch["x"], batch["adj"], batch["mask"]
+    h = x
+    for i in range(cfg.n_gnn_blocks):
+        h = layer(p["gnn"][f"b{i}"], h, adj, mask, use_pallas=cfg.use_pallas)
+        h = jax.nn.relu(h)
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = nn.dropout(sub, h, cfg.dropout, train)
+    z = _readout(h, mask, cfg.readout)                 # node embedding z
+    feats = jnp.concatenate([z, batch["static"]], axis=-1)  # z ⊕ F_s
+    y = feats
+    for i in range(cfg.n_fc_blocks):
+        y = nn.linear(p["fc"][f"b{i}"], y)
+        if i < cfg.n_fc_blocks - 1:
+            y = jax.nn.relu(y)
+            if train and rng is not None:
+                rng, sub = jax.random.split(rng)
+                y = nn.dropout(sub, y, cfg.dropout, train)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# target transforms & metrics
+# ---------------------------------------------------------------------------
+
+def encode_targets(y: jnp.ndarray) -> jnp.ndarray:
+    """physical units → log1p training space."""
+    return jnp.log1p(jnp.maximum(y, 0.0))
+
+
+def decode_targets(yhat: jnp.ndarray) -> jnp.ndarray:
+    """log1p space → physical units (latency ms, energy J, memory MB)."""
+    return jnp.expm1(yhat)
+
+
+def huber(pred: jnp.ndarray, target: jnp.ndarray,
+          delta: float = 1.0) -> jnp.ndarray:
+    """Huber loss (paper Table 3) — elementwise."""
+    err = pred - target
+    abs_err = jnp.abs(err)
+    quad = jnp.minimum(abs_err, delta)
+    return 0.5 * quad * quad + delta * (abs_err - quad)
+
+
+def mape(pred_phys: jnp.ndarray, target_phys: jnp.ndarray) -> jnp.ndarray:
+    """Mean Absolute Percentage Error (paper's metric), in [0, ...]."""
+    denom = jnp.maximum(jnp.abs(target_phys), 1e-6)
+    return jnp.mean(jnp.abs(pred_phys - target_phys) / denom)

@@ -1,0 +1,79 @@
+"""Node Feature Generator (paper §3.2, Algorithm 1).
+
+Each operator node gets a fixed-length **32-dim** feature vector:
+
+    F_node = F_oh ⊕ F_attr ⊕ F_shape          (Algorithm 1, lines 6-8)
+
+* ``F_oh``    — 16-dim one-hot over :data:`repro.core.ir.OP_VOCAB`.
+* ``F_attr``  — 8-dim operator attributes (kernel/stride/groups/window/
+                contraction size/moved elements/dtype width).
+* ``F_shape`` — 8-dim output-shape descriptor (rank, leading log-dims,
+                log-numel, log-param-bytes).
+
+All magnitude-like entries are ``log1p``-scaled: node features must live on
+comparable scales for the GNN, and operator sizes span 9 orders of
+magnitude across the dataset.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .ir import OP_INDEX, OP_VOCAB, OpGraph, OpNode, dtype_bytes
+
+N_OP = len(OP_VOCAB)            # 16
+N_ATTR = 8
+N_SHAPE = 8
+NODE_FEATURE_DIM = N_OP + N_ATTR + N_SHAPE   # 32 — matches the paper
+
+
+def _log1p(x: float) -> float:
+    return float(np.log1p(max(float(x), 0.0)))
+
+
+def node_feature(nd: OpNode) -> np.ndarray:
+    f = np.zeros((NODE_FEATURE_DIM,), dtype=np.float32)
+    # --- one-hot over op kind -------------------------------------------
+    f[OP_INDEX[nd.op]] = 1.0
+    # --- attributes ------------------------------------------------------
+    a = nd.attrs
+    kernel = a.get("kernel", [0, 0])
+    stride = a.get("stride", [1])
+    window = a.get("window", [0])
+    base = N_OP
+    f[base + 0] = float(kernel[0]) if len(kernel) > 0 else 0.0
+    f[base + 1] = float(kernel[1]) if len(kernel) > 1 else f[base + 0]
+    f[base + 2] = float(stride[0]) if len(stride) > 0 else 1.0
+    f[base + 3] = _log1p(a.get("groups", 1))
+    f[base + 4] = float(window[0]) if len(window) > 0 else 0.0
+    f[base + 5] = _log1p(a.get("contract_k", 0))
+    f[base + 6] = _log1p(a.get("moved_elems", 0))
+    f[base + 7] = float(dtype_bytes(nd.dtype))
+    # --- output shape ------------------------------------------------------
+    base = N_OP + N_ATTR
+    shape = nd.out_shape
+    f[base + 0] = float(len(shape))
+    for i in range(4):
+        f[base + 1 + i] = _log1p(shape[i]) if i < len(shape) else 0.0
+    f[base + 5] = _log1p(nd.out_elems)
+    f[base + 6] = _log1p(nd.param_bytes)
+    f[base + 7] = _log1p(nd.flops)
+    return f
+
+
+def node_feature_matrix(g: OpGraph) -> np.ndarray:
+    """X with shape [N_op, N_features] (paper notation)."""
+    if g.num_nodes == 0:
+        return np.zeros((0, NODE_FEATURE_DIM), dtype=np.float32)
+    return np.stack([node_feature(nd) for nd in g.nodes], axis=0)
+
+
+def adjacency_matrix(g: OpGraph) -> np.ndarray:
+    """A[dst, src] — row i holds the in-neighbourhood of node i."""
+    return g.adjacency()
+
+
+def graph_tensors(g: OpGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """The (A, X) pair of Algorithm 1."""
+    return adjacency_matrix(g), node_feature_matrix(g)

@@ -1,0 +1,95 @@
+"""User-facing DIPPM API — the paper's Fig. 5 usability surface.
+
+    from repro.core.predictor import DIPPM
+    dippm = DIPPM.from_params(params, cfg)
+    out = dippm.predict_jax(forward, param_specs, input_spec, batch=16)
+    out.latency_ms, out.energy_j, out.memory_mb, out.mig, out.tpu_slice
+
+Frontends: any JAX callable (``predict_jax``), a serialized portable graph
+(``predict_json``), or a pre-built OpGraph (``predict_graph``). The MIG
+profile (eq. 2) and the TPU-slice recommendation are derived from the
+predicted memory exactly as §3.5 prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .batching import collate, sample_from_graph
+from .frontends import from_jax, from_json
+from .gnn import PMGNSConfig, decode_targets, pmgns_apply
+from .ir import OpGraph
+from .mig import predict_mig, predict_pods, predict_tpu_slice
+
+
+@dataclasses.dataclass
+class Prediction:
+    latency_ms: float
+    energy_j: float
+    memory_mb: float
+    mig: Optional[str]
+    tpu_slice: Optional[str]
+    pods: int
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __repr__(self) -> str:  # pragma: no cover — cosmetic
+        return (f"Prediction(latency={self.latency_ms:.3f} ms, "
+                f"energy={self.energy_j:.4f} J, "
+                f"memory={self.memory_mb:.1f} MB, mig={self.mig}, "
+                f"tpu_slice={self.tpu_slice}, pods={self.pods})")
+
+
+class DIPPM:
+    """Trained predictor + frontends + resource advisors."""
+
+    def __init__(self, params, cfg: PMGNSConfig):
+        self.params = params
+        self.cfg = cfg
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_params(cls, params, cfg: PMGNSConfig) -> "DIPPM":
+        return cls(params, cfg)
+
+    @classmethod
+    def load(cls, path: str) -> "DIPPM":
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        return cls(blob["params"], blob["cfg"])
+
+    def save(self, path: str) -> None:
+        import jax
+        params = jax.tree_util.tree_map(np.asarray, self.params)
+        with open(path, "wb") as f:
+            pickle.dump({"params": params, "cfg": self.cfg}, f)
+
+    # -- prediction ----------------------------------------------------------
+    def predict_graph(self, g: OpGraph) -> Prediction:
+        import jax.numpy as jnp
+        sample = sample_from_graph(g)
+        batch = collate([sample])
+        jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "y"}
+        pred = pmgns_apply(self.params, self.cfg, jb, train=False)
+        lat, enr, mem = [float(x) for x in np.asarray(decode_targets(pred))[0]]
+        return Prediction(
+            latency_ms=lat, energy_j=enr, memory_mb=mem,
+            mig=predict_mig(mem),
+            tpu_slice=predict_tpu_slice(mem),
+            pods=predict_pods(mem),
+            meta=dict(g.meta),
+        )
+
+    def predict_jax(self, forward, param_specs, *input_specs,
+                    batch: Optional[int] = None,
+                    meta: Optional[Dict[str, Any]] = None) -> Prediction:
+        m = dict(meta or {})
+        if batch is not None:
+            m.setdefault("batch", batch)
+        g = from_jax(forward, param_specs, *input_specs, meta=m)
+        return self.predict_graph(g)
+
+    def predict_json(self, doc: Dict[str, Any]) -> Prediction:
+        return self.predict_graph(from_json(doc))

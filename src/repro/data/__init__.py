@@ -1,0 +1,2 @@
+from .pipeline import (SyntheticLMDataset, HostDataLoader, make_lm_batches,
+                       deterministic_shard)

@@ -1,0 +1,2 @@
+from .builder import (DatasetRecord, build_dataset, load_dataset,
+                      save_dataset, split_dataset, records_to_samples)

@@ -1,0 +1,201 @@
+"""DIPPM graph dataset builder (paper §4.1).
+
+Reproduces the paper's 10,508-graph multi-regression dataset: for each
+family in Table 2 we sample variant configs (depth/width/resolution/batch),
+trace them into OpGraphs, and label every graph with
+``Y = (latency_ms, energy_j, memory_mb)`` from the analytic A100 cost model
+(the measurement stand-in — DESIGN.md §2). Each record keeps
+
+    X  — [n, 32] node features        (paper §3.2)
+    A  — sparse edge list             (densified at batch time)
+    F_s — 5 static features           (paper §3.3, eq. 1)
+    Y  — 3 regression targets         (paper §4.1)
+
+Storage is sharded ``.npz`` with edge lists (dense [N,N] adjacency would be
+~10 GB at full scale); :func:`records_to_samples` pads to bucketed dense
+batches for the TPU-friendly training layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.batching import DEFAULT_BUCKETS, GraphSample, bucket_for
+from ..core.node_features import NODE_FEATURE_DIM, node_feature_matrix
+from ..core.static_features import static_features
+from ..core.tracer import trace_graph
+from ..perfmodel.cost_model import estimate
+from ..perfmodel.devices import DEVICES
+from ..zoo.families import TABLE2_FRACTIONS, build_family, family_variants
+
+DATASET_VERSION = "dippm-ds-v1"
+
+
+@dataclasses.dataclass
+class DatasetRecord:
+    x: np.ndarray        # [n, 32] float32
+    edges: np.ndarray    # [e, 2] int32 (src, dst)
+    static: np.ndarray   # [5] float32
+    y: np.ndarray        # [3] float32
+    family: str
+    n_nodes: int
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+
+def _trace_and_label(family: str, cfg: Dict, device_name: str,
+                     noise_sigma: float) -> DatasetRecord:
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as S
+
+    specs, fwd, meta = build_family(family, cfg)
+    x_spec = S((cfg["batch"], cfg["res"], cfg["res"], 3), jnp.float32)
+    g = trace_graph(fwd, specs, x_spec, meta=meta)
+    est = estimate(g, DEVICES[device_name], noise_sigma=noise_sigma)
+    return DatasetRecord(
+        x=node_feature_matrix(g),
+        edges=np.asarray(g.edges, dtype=np.int32).reshape(-1, 2),
+        static=static_features(g),
+        y=est.as_targets(),
+        family=family,
+        n_nodes=g.num_nodes,
+        meta={"batch": cfg["batch"], "res": cfg["res"]},
+    )
+
+
+def build_dataset(
+    n_graphs: int = 1024,
+    seed: int = 0,
+    device_name: str = "a100-40gb",
+    noise_sigma: float = 0.01,
+    fractions: Optional[Dict[str, float]] = None,
+    extra_families: Sequence[str] = (),
+    progress_every: int = 0,
+) -> List[DatasetRecord]:
+    """Build ``n_graphs`` records following the Table-2 family mix.
+
+    ``extra_families`` (e.g. ``("convnext",)``) are built *in addition*, one
+    share each, and tagged so they can be held out (Table 5 "unseen").
+    """
+    fractions = dict(fractions or TABLE2_FRACTIONS)
+    rng = np.random.default_rng(seed)
+    plan: List[Tuple[str, Dict]] = []
+    for fam, frac in fractions.items():
+        count = max(1, int(round(frac * n_graphs)))
+        for _ in range(count):
+            plan.append((fam, family_variants(fam, rng)))
+    for fam in extra_families:
+        for _ in range(max(1, n_graphs // 50)):
+            plan.append((fam, family_variants(fam, rng)))
+    rng.shuffle(plan)
+
+    records: List[DatasetRecord] = []
+    for i, (fam, cfg) in enumerate(plan):
+        try:
+            records.append(_trace_and_label(fam, cfg, device_name, noise_sigma))
+        except Exception as e:  # pragma: no cover — bad variant config
+            print(f"[dataset] skipping {fam} {cfg}: {e}")
+        if progress_every and (i + 1) % progress_every == 0:
+            print(f"[dataset] {i + 1}/{len(plan)} graphs traced")
+    return records
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def save_dataset(records: Sequence[DatasetRecord], path: str,
+                 shard_size: int = 2048) -> None:
+    os.makedirs(path, exist_ok=True)
+    manifest = {"version": DATASET_VERSION, "n": len(records), "shards": []}
+    for si in range(0, len(records), shard_size):
+        shard = records[si:si + shard_size]
+        arrs: Dict[str, np.ndarray] = {}
+        metas = []
+        for i, r in enumerate(shard):
+            arrs[f"x{i}"] = r.x
+            arrs[f"e{i}"] = r.edges
+            arrs[f"s{i}"] = r.static
+            arrs[f"y{i}"] = r.y
+            metas.append({"family": r.family, "n_nodes": r.n_nodes,
+                          **r.meta})
+        fname = f"shard{si // shard_size:04d}.npz"
+        np.savez_compressed(os.path.join(path, fname), **arrs)
+        manifest["shards"].append({"file": fname, "metas": metas})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_dataset(path: str) -> List[DatasetRecord]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("version") != DATASET_VERSION:
+        raise ValueError("dataset version mismatch")
+    records: List[DatasetRecord] = []
+    for sh in manifest["shards"]:
+        data = np.load(os.path.join(path, sh["file"]))
+        for i, meta in enumerate(sh["metas"]):
+            records.append(DatasetRecord(
+                x=data[f"x{i}"], edges=data[f"e{i}"], static=data[f"s{i}"],
+                y=data[f"y{i}"], family=meta["family"],
+                n_nodes=meta["n_nodes"],
+                meta={k: v for k, v in meta.items()
+                      if k not in ("family", "n_nodes")}))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# splits + batching glue
+# ---------------------------------------------------------------------------
+
+def split_dataset(records: Sequence[DatasetRecord], seed: int = 0,
+                  train: float = 0.70, val: float = 0.15,
+                  holdout_families: Sequence[str] = ("convnext",),
+                  ) -> Dict[str, List[DatasetRecord]]:
+    """Random 70/15/15 split (paper Table 3) + family holdout ("unseen")."""
+    rng = np.random.default_rng(seed)
+    main = [r for r in records if r.family not in holdout_families]
+    unseen = [r for r in records if r.family in holdout_families]
+    idx = rng.permutation(len(main))
+    n_tr = int(train * len(main))
+    n_va = int(val * len(main))
+    return {
+        "train": [main[i] for i in idx[:n_tr]],
+        "val": [main[i] for i in idx[n_tr:n_tr + n_va]],
+        "test": [main[i] for i in idx[n_tr + n_va:]],
+        "unseen": unseen,
+    }
+
+
+def records_to_samples(records: Sequence[DatasetRecord],
+                       buckets=DEFAULT_BUCKETS) -> List[GraphSample]:
+    out: List[GraphSample] = []
+    for r in records:
+        n = r.x.shape[0]
+        cap = buckets[-1]
+        x, edges = r.x, r.edges
+        if n > cap:
+            flop_col = x[:, -1]  # log1p(flops) is the last feature
+            keep = np.sort(np.argsort(-flop_col, kind="stable")[:cap])
+            remap = -np.ones((n,), dtype=np.int64)
+            remap[keep] = np.arange(cap)
+            x = x[keep]
+            if len(edges):
+                e = edges[(remap[edges[:, 0]] >= 0) & (remap[edges[:, 1]] >= 0)]
+                edges = np.stack([remap[e[:, 0]], remap[e[:, 1]]], -1) \
+                    if len(e) else e.reshape(0, 2)
+            n = cap
+        size = bucket_for(n, buckets)
+        xp = np.zeros((size, x.shape[1]), dtype=np.float32)
+        xp[:n] = x
+        adj = np.zeros((size, size), dtype=np.float32)
+        if len(edges):
+            adj[edges[:, 1], edges[:, 0]] = 1.0
+        mask = np.zeros((size,), dtype=np.float32)
+        mask[:n] = 1.0
+        out.append(GraphSample(x=xp, adj=adj, mask=mask, static=r.static,
+                               y=r.y, meta={"family": r.family, **r.meta}))
+    return out

@@ -1,0 +1,1 @@
+from .ops import sage_aggregate, flash_attention, ssd_scan, ssd_decode

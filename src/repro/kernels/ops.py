@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas path is the TPU target; on CPU (this container)
+kernels execute in ``interpret=True`` mode for correctness validation, and
+callers can force the pure-jnp reference with ``impl="ref"`` (the default
+for CPU-bound training utilities, since interpret mode is slow).
+
+The environment variable ``REPRO_KERNEL_IMPL`` overrides the default for
+the whole process (values: ``pallas`` | ``ref``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import ref as _ref
+from .flash_attention import flash_attention_pallas
+from .sage_spmm import sage_aggregate_pallas
+from .ssd_scan import ssd_scan_pallas
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env in ("pallas", "ref"):
+        return env
+    # pallas-on-TPU, ref elsewhere (interpret mode is for tests)
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sage_aggregate(adj: jax.Array, h: jax.Array,
+                   impl: Optional[str] = None) -> jax.Array:
+    """Batched GraphSAGE mean aggregation — see ``sage_spmm``."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return sage_aggregate_pallas(adj, h, interpret=_interpret())
+    return _ref.sage_aggregate_ref(adj, h)
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    scale: Optional[float] = None, window: int = 0,
+                    q_offset: int = 0, impl: Optional[str] = None):
+    """Streaming-softmax attention — see ``flash_attention``."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, window=window,
+            q_offset=q_offset, interpret=_interpret())
+    return _ref.attention_ref(q, k, v, causal=causal, scale=scale,
+                              window=window, q_offset=q_offset)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             impl: Optional[str] = None):
+    """Chunked Mamba2 SSD scan — see ``ssd_scan``."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                               interpret=_interpret())
+    return _ref.ssd_scan_ref(x, dt, A, B, C)
+
+
+ssd_decode = _ref.ssd_decode_ref

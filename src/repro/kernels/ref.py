@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematically-direct implementation; tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sage_aggregate_ref(adj: jax.Array, h: jax.Array) -> jax.Array:
+    """mean_{j∈N(i)} h_j — adj: [B, N, N] (adj[b,dst,src]), h: [B, N, F]."""
+    deg = jnp.maximum(adj.sum(axis=-1, keepdims=True), 1.0)
+    return jnp.einsum("bnm,bmf->bnf", adj / deg, h).astype(h.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, scale: float | None = None,
+                  window: int = 0, q_offset: int = 0) -> jax.Array:
+    """Naive softmax attention over [B, H, S, D]."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window > 0:
+        mask = mask & (cols >= rows - window + 1)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                 B: jax.Array, C: jax.Array) -> jax.Array:
+    """Exact sequential SSD recurrence (per-timestep lax.scan).
+
+    x: [Bt,S,H,P], dt: [Bt,S,H], A: [H], B/C: [Bt,S,H,N] → y: [Bt,S,H,P]
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp                 # [Bt,H,P],[Bt,H],[Bt,H,N]
+        a_t = jnp.exp(dt_t * A[None, :])          # [Bt,H]
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt_t, B_t, x_t)
+        state = state * a_t[..., None, None] + upd
+        y_t = jnp.einsum("bhn,bhnp->bhp", C_t, state)
+        return state, y_t
+
+    x_f = x.astype(jnp.float32)
+    dt_f = dt.astype(jnp.float32)
+    B_f = B.astype(jnp.float32)
+    C_f = C.astype(jnp.float32)
+    init = jnp.zeros((Bt, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x_f, 1, 0), jnp.moveaxis(dt_f, 1, 0),
+          jnp.moveaxis(B_f, 1, 0), jnp.moveaxis(C_f, 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_decode_ref(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                   A: jax.Array, B_t: jax.Array, C_t: jax.Array):
+    """One SSD decode step. state: [Bt,H,N,P] → (y_t [Bt,H,P], state')."""
+    a_t = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    state = state * a_t[..., None, None] + upd
+    y_t = jnp.einsum("bhn,bhnp->bhp", C_t.astype(jnp.float32), state)
+    return y_t.astype(x_t.dtype), state

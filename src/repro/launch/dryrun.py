@@ -1,0 +1,299 @@
+import os
+if "REPRO_DRYRUN_DEVICES" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+else:  # debug hook: smaller placeholder device counts
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+if "REPRO_XLA_EXTRA" in os.environ:
+    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU-v5e pods; the
+production meshes are 16×16 ('data','model') and 2×16×16
+('pod','data','model'); every cell must ``.lower().compile()`` and report
+``memory_analysis()`` (fits-in-HBM proof) + ``cost_analysis()`` +
+parsed-collective roofline terms (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k --mesh single --out artifacts/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import all_arch_names, get_config
+from ..models import lm
+from ..models.config import ArchConfig
+from ..roofline.analysis import V5E, analyze_hlo
+from ..sharding import ShardingPolicy, batch_specs, named_shardings
+from . import steps as steps_mod
+from .input_specs import SHAPES, cell_for, decode_specs, input_specs
+from .mesh import data_axes_of, make_production_mesh
+
+
+def _policy_for(mesh, batch: int) -> ShardingPolicy:
+    """Batch axes = the longest data-axis prefix that divides the batch
+    (long_500k's batch=1 shards over nothing; everything else over
+    ('pod','data'))."""
+    data_axes = data_axes_of(mesh)
+    batch_axes = []
+    rem = batch
+    for ax in data_axes:
+        n = mesh.shape[ax]
+        if rem % n == 0:
+            batch_axes.append(ax)
+            rem //= n
+    return ShardingPolicy(data_axes=data_axes, model_axis="model",
+                          fsdp=True, fsdp_axis="data",
+                          batch_axes=tuple(batch_axes),
+                          axis_sizes={a: mesh.shape[a]
+                                      for a in mesh.axis_names})
+
+
+def lower_cell(arch: str, shape: str, mesh, *,
+               microbatches: int = 1,
+               optimizer_state_dtype=jnp.bfloat16,
+               kv_cache_dtype: str = None,
+               fsdp_over_pod: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the analysis record."""
+    cfg = get_config(arch)
+    if kv_cache_dtype:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_cache_dtype)
+    cell = cell_for(cfg, arch, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+    }
+    if not cell.runnable:
+        rec["status"] = cell.skip_reason
+        return rec
+
+    policy = _policy_for(mesh, SHAPES[shape]["batch"])
+    if fsdp_over_pod and "pod" in mesh.axis_names:
+        # ZeRO-3 across the full 512-chip fleet: parameters/grads/opt
+        # sharded over ('pod','data') — per-step cross-pod all-gathers
+        # trade collective volume for 2× state memory (§Perf B2)
+        policy = ShardingPolicy(
+            data_axes=policy.data_axes, model_axis="model", fsdp=True,
+            fsdp_axis=("pod", "data"), batch_axes=policy.batch_axes,
+            axis_sizes={a: mesh.shape[a] for a in mesh.axis_names})
+    # sequence parallelism on for train/prefill (S≫1); irrelevant at S=1.
+    # remat only matters under autodiff — disabling it for inference
+    # cells removes the checkpoint wrappers from the partitioner's work.
+    ctx = steps_mod.make_ctx(mesh, cfg, remat=(cell.kind == "train"),
+                             batch_axes=policy.batch_axes,
+                             seq_parallel=(cell.kind != "decode"))
+    pspec_tree = lm.param_specs(cfg)
+    t0 = time.time()
+
+    with mesh:
+        if cell.kind == "train":
+            opt = steps_mod.default_optimizer(
+                state_dtype=optimizer_state_dtype)
+            train_step = steps_mod.make_train_step(
+                cfg, ctx, opt, microbatches=microbatches)
+            in_sh, out_sh = steps_mod.train_shardings(
+                cfg, mesh, policy, pspec_tree)
+            opt_spec = jax.eval_shape(opt.init, pspec_tree)
+            step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            batch = input_specs(cfg, shape)
+            lowered = jax.jit(
+                train_step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(0, 1),
+            ).lower(pspec_tree, opt_spec, step_spec, batch)
+        elif cell.kind in ("prefill", "encode"):
+            from jax.sharding import NamedSharding
+            b_sh = {k: NamedSharding(mesh, v) for k, v in batch_specs(
+                cfg, policy).items()}
+            batch = input_specs(cfg, shape)
+            b_sh = {k: b_sh[k] for k in batch}
+            if cell.kind == "encode":
+                step = steps_mod.make_encode_step(cfg, ctx)
+            else:
+                step = steps_mod.make_prefill_step(
+                    cfg, ctx, max_len=SHAPES[shape]["seq"])
+            p_sh, c_sh, _ = steps_mod.serve_shardings(
+                cfg, mesh, policy, pspec_tree)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh),
+            ).lower(pspec_tree, batch)
+        else:  # decode
+            serve_step = steps_mod.make_serve_step(cfg, ctx)
+            p_sh, c_sh, b_sh = steps_mod.serve_shardings(
+                cfg, mesh, policy, pspec_tree)
+            ds = decode_specs(cfg, shape)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            i_sh = {}
+            for k in ds["inputs"]:
+                key = "tokens" if k == "tokens" else k
+                i_sh[k] = b_sh.get(key, NamedSharding(
+                    mesh, P(policy.batch_axes, None, None)))
+            idx_sh = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, c_sh, i_sh, idx_sh),
+                donate_argnums=(1,),
+            ).lower(pspec_tree, ds["cache"], ds["inputs"],
+                    ds["cache_index"])
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- analyses ----------------------------------------------------------
+    mem = compiled.memory_analysis()
+    rec["memory"] = _memory_record(mem)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in (
+                "flops", "bytes accessed", "optimal_seconds",
+                "utilization")}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    n_dev = int(mesh.devices.size)
+    text = compiled.as_text()
+    rec["hlo_chars"] = len(text)
+    report = analyze_hlo(text, V5E, rec.get("cost_analysis"), n_dev)
+    rec["roofline"] = report.to_json()
+
+    # model flops (6·N·D for training, 2·N·D for single forward-token)
+    cfgp = get_config(arch)
+    n_params = cfgp.param_count()
+    n_active = _active_params(cfgp)
+    info = SHAPES[shape]
+    toks = info["batch"] * (info["seq"] if cell.kind in
+                            ("train", "prefill", "encode") else 1)
+    mult = 6 if cell.kind == "train" else 2
+    rec["model_flops_global"] = float(mult * n_active * toks)
+    rec["model_flops_per_device"] = rec["model_flops_global"] / n_dev
+    rec["param_count"] = int(n_params)
+    rec["active_param_count"] = int(n_active)
+    if report.flops > 0:
+        rec["useful_flop_ratio"] = rec["model_flops_per_device"] / \
+            report.flops
+    rec["status"] = "ok"
+    return rec
+
+
+def _active_params(cfg: ArchConfig) -> int:
+    """Active (per-token) parameter count — MoE uses top-k + shared only."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    mo = cfg.moe
+    n_moe_layers = cfg.n_layers - mo.first_moe_layer
+    per_expert = 3 * cfg.d_model * mo.d_expert
+    inactive = n_moe_layers * (mo.n_experts - mo.top_k) * per_expert
+    return total - inactive
+
+
+def _memory_record(mem) -> Dict[str, Any]:
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        v = getattr(mem, key, None)
+        if v is not None:
+            out[key] = int(v)
+    args = out.get("argument_size_in_bytes", 0)
+    temp = out.get("temp_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    outb = out.get("output_size_in_bytes", 0)
+    # live bytes per device ≈ args + temps + (outputs - aliased/donated)
+    out["peak_bytes_per_device"] = args + temp + max(outb - alias, 0)
+    out["fits_16gb_hbm"] = bool(out["peak_bytes_per_device"] < 16e9)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def run(arch: str, shape: str, mesh_kind: str, out_dir: str,
+        microbatches: int = 1) -> Dict[str, Any]:
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[mesh_kind]
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = "multi" if multi else "single"
+        try:
+            rec = lower_cell(arch, shape, mesh, microbatches=microbatches)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if multi else "single",
+                   "status": f"FAILED: {type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        rec["mesh_kind"] = tag
+        results.append(rec)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch.replace('.', 'p')}__{shape}__{tag}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+        status = rec.get("status", "?")
+        mem = rec.get("memory", {}).get("peak_bytes_per_device", 0) / 1e9
+        roof = rec.get("roofline", {})
+        print(f"[dryrun] {arch:22s} {shape:12s} {tag:6s} {status:10s} "
+              f"mem={mem:6.2f}GB "
+              f"c={roof.get('compute_s', 0):.3e}s "
+              f"m={roof.get('memory_s', 0):.3e}s "
+              f"coll={roof.get('collective_s', 0):.3e}s "
+              f"dom={roof.get('dominant', '-')}", flush=True)
+    return results[-1]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = all_arch_names()
+        shapes = list(SHAPES)
+    else:
+        archs = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+
+    for arch in archs:
+        for shape in shapes:
+            if args.skip_existing and args.out:
+                tags = {"single": ["single"], "multi": ["multi"],
+                        "both": ["single", "multi"]}[args.mesh]
+                done = all(os.path.exists(os.path.join(
+                    args.out,
+                    f"{arch.replace('.', 'p')}__{shape}__{t}.json"))
+                    for t in tags)
+                if done:
+                    continue
+            run(arch, shape, args.mesh, args.out,
+                microbatches=args.microbatches)
+
+
+if __name__ == "__main__":
+    main()

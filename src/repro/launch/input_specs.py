@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) cell.
+
+The brief's shape grid (LM transformers: seq_len × global_batch):
+
+    train_4k      seq 4,096    batch 256   → lowers ``train_step``
+    prefill_32k   seq 32,768   batch 32    → lowers ``prefill_step``
+    decode_32k    seq 32,768   batch 128   → lowers ``serve_step`` (1 token,
+                                             KV cache of 32k)
+    long_500k     seq 524,288  batch 1     → ``serve_step``; SSM/hybrid/SWA
+                                             archs only
+
+No device allocation anywhere — weak-type-correct ShapeDtypeStructs,
+shardable by the specs from ``repro.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from ..models import lm
+from ..models.config import ArchConfig
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                     # train | prefill | decode
+    runnable: bool
+    skip_reason: str = ""
+
+
+def cell_for(cfg: ArchConfig, arch: str, shape: str) -> Cell:
+    """Applicability per the brief's rules (see DESIGN.md §4)."""
+    info = SHAPES[shape]
+    kind = info["kind"]
+    if cfg.is_encoder_only and kind == "decode":
+        return Cell(arch, shape, kind, False, "skip(encoder-only)")
+    if shape == "long_500k" and not cfg.subquadratic:
+        return Cell(arch, shape, kind, False, "skip(full-attn)")
+    if cfg.is_encoder_only and kind == "prefill":
+        # encoder forward plays the prefill role (no cache to build)
+        return Cell(arch, shape, "encode", True)
+    return Cell(arch, shape, kind, True)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for a train/prefill forward."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        specs["features"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.frontend == "tokens+vision":
+        specs["vision_embeds"] = SDS(
+            (B, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16)
+    if info["kind"] == "train" or cfg.is_encoder_only:
+        specs["labels"] = SDS((B, S), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """(inputs, cache, cache_index) ShapeDtypeStructs for one decode step."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    inputs: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        inputs["features"] = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs["tokens"] = SDS((B, 1), jnp.int32)
+    cache = lm.init_cache(cfg, B, S, abstract=True)
+    return {
+        "inputs": inputs,
+        "cache": cache,
+        "cache_index": SDS((), jnp.int32),
+    }

@@ -1,0 +1,171 @@
+"""Jittable train / prefill / serve steps with full sharding wiring.
+
+``make_train_step`` wires: loss (CE + MoE aux) → grads → optional int8
+gradient compression on the pod axis → optimizer update, with
+donate-argnums so params/optimizer state update in place. ``in_shardings``
+/ ``out_shardings`` come from ``repro.sharding`` — these are the artifacts
+the multi-pod dry-run lowers and compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import lm
+from ..models.config import ArchConfig
+from ..models.lm import ParallelCtx
+from ..optim import Optimizer, adamw, cosine_warmup
+from ..sharding import (ShardingPolicy, batch_specs, cache_specs,
+                        param_partition_specs)
+
+Params = Dict[str, Any]
+
+
+def make_ctx(mesh, cfg: ArchConfig, *, remat: bool = True,
+             batch_axes=None, seq_parallel: bool = True) -> ParallelCtx:
+    if mesh is None:
+        return ParallelCtx(remat=remat)
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if batch_axes is not None:
+        data_axes = tuple(batch_axes)
+    moe_impl = "local"
+    if cfg.moe is not None:
+        moe_impl = cfg.moe.sharding if mesh is not None else "local"
+    return ParallelCtx(mesh=mesh, data_axes=data_axes, model_axis="model",
+                       moe_impl=moe_impl, remat=remat,
+                       seq_axis="model" if seq_parallel else None)
+
+
+def default_optimizer(state_dtype=jnp.bfloat16) -> Optimizer:
+    """Production default: AdamW, bf16 states, cosine schedule, clip 1.0."""
+    return adamw(cosine_warmup(3e-4, 2000, 100_000), b1=0.9, b2=0.95,
+                 weight_decay=0.1, state_dtype=state_dtype,
+                 grad_clip_norm=1.0)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, ctx: ParallelCtx,
+                    optimizer: Optional[Optimizer] = None,
+                    compress_grads: bool = False,
+                    microbatches: int = 1) -> Callable:
+    """→ train_step(params, opt_state, step, batch) → (params', opt', step',
+    metrics). Pure function of its inputs — jit/pjit it with the sharding
+    trees from :func:`train_shardings`.
+    """
+    optimizer = optimizer or default_optimizer()
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, ctx)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+            return l, metrics, grads
+        # microbatched gradient accumulation: splits the batch on the
+        # leading axis and scans, overlapping each microbatch's FSDP
+        # all-gathers with the previous microbatch's compute.
+        def mb(carry, mbatch):
+            acc, lsum = carry
+            (l, metrics), g = jax.value_and_grad(
+                loss, has_aux=True)(params, mbatch)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, lsum + l), metrics
+
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        (gsum, lsum), metrics = jax.lax.scan(mb, (zeros, 0.0), split)
+        grads = jax.tree_util.tree_map(
+            lambda g: (g / microbatches).astype(jnp.float32), gsum)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return lsum / microbatches, metrics, grads
+
+    def train_step(params, opt_state, step, batch):
+        l, metrics, grads = compute_grads(params, batch)
+        if compress_grads and ctx.mesh is not None and \
+                "pod" in ctx.mesh.axis_names:
+            from ..runtime.compression import compressed_psum_tree
+            grads, opt_state = compressed_psum_tree(
+                grads, opt_state, ctx.mesh, "pod")
+        new_params, new_opt = optimizer.update(step, opt_state, params,
+                                               grads)
+        metrics = dict(metrics)
+        metrics["loss"] = l
+        return new_params, new_opt, step + 1, metrics
+
+    return train_step
+
+
+def train_shardings(cfg: ArchConfig, mesh, policy: ShardingPolicy,
+                    params_spec) -> Tuple[Any, Any]:
+    """(in_shardings, out_shardings) trees for ``train_step``."""
+    pspecs = param_partition_specs(params_spec, cfg, policy)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    p_sh = ns(pspecs)
+    opt_sh = {"m": p_sh, "v": p_sh}
+    step_sh = NamedSharding(mesh, P())
+    from .input_specs import input_specs as _ispecs
+    wanted = set(_ispecs(cfg, "train_4k"))
+    b_sh = {k: NamedSharding(mesh, v)
+            for k, v in batch_specs(cfg, policy).items() if k in wanted}
+    metrics_sh = NamedSharding(mesh, P())
+    in_sh = (p_sh, opt_sh, step_sh, b_sh)
+    out_sh = (p_sh, opt_sh, step_sh,
+              {"ce": metrics_sh, "aux": metrics_sh, "loss": metrics_sh})
+    return in_sh, out_sh
+
+
+# ---------------------------------------------------------------------------
+# serve (prefill + decode)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, ctx: ParallelCtx,
+                      max_len: int) -> Callable:
+    def prefill_step(params, inputs):
+        logits, cache = lm.prefill(params, cfg, inputs, max_len, ctx)
+        return logits, cache
+    return prefill_step
+
+
+def make_encode_step(cfg: ArchConfig, ctx: ParallelCtx) -> Callable:
+    """Encoder-only forward (hubert): features → per-frame logits."""
+    def encode_step(params, inputs):
+        logits, _ = lm.forward(params, cfg, inputs, ctx)
+        return logits
+    return encode_step
+
+
+def make_serve_step(cfg: ArchConfig, ctx: ParallelCtx) -> Callable:
+    """One decode step: greedy next token + updated cache."""
+    def serve_step(params, cache, inputs, cache_index):
+        logits, new_cache = lm.decode_step(params, cfg, cache, inputs,
+                                           cache_index, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache, cache_index + 1
+    return serve_step
+
+
+def serve_shardings(cfg: ArchConfig, mesh, policy: ShardingPolicy,
+                    params_spec):
+    pspecs = param_partition_specs(params_spec, cfg, policy)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    p_sh = ns(pspecs)
+    c_sh = ns(cache_specs(cfg, policy, tp=mesh.shape["model"]))
+    bspec = {k: NamedSharding(mesh, v)
+             for k, v in batch_specs(cfg, policy).items()
+             if k not in ("labels", "loss_mask")}
+    return p_sh, c_sh, bspec

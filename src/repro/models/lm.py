@@ -1,0 +1,640 @@
+"""Model assembly: embeddings + layer stacks + heads for every assigned arch.
+
+Families (selected by ``ArchConfig.block`` / frontend / moe):
+
+* dense decoder        — chatglm3, h2o-danube (SWA), yi-34b, qwen2.5
+* MoE decoder          — deepseek-v2 (MLA + shared experts, layer-0 dense),
+                         grok-1 (GQA, 8e top-2, intra-expert TP)
+* encoder-only         — hubert-xlarge (audio-frame frontend stub)
+* VLM decoder          — llama-3.2-vision (cross-attn every 5th layer)
+* SSM                  — mamba2-370m (pure Mamba2/SSD)
+* hybrid               — zamba2-2.7b (Mamba2 backbone + weight-tied shared
+                         attention block every 6 layers)
+
+Homogeneous layer stacks are **scanned** (`lax.scan` over stacked params):
+one layer body is compiled once regardless of depth — this is what keeps
+the 512-device SPMD dry-run compile tractable. Heterogeneous structure
+(deepseek layer 0, VLM cross-attn groups, zamba shared block) is expressed
+as group-scans / explicit blocks around the scans.
+
+Distribution: the forward is GSPMD-first (sharding constraints on
+activations; see ``repro.sharding``); the MoE sublayer optionally drops
+into ``shard_map`` for explicit expert-parallel all_to_all dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .. import nn
+from .config import ArchConfig
+from .parallel import ParallelCtx
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg: ArchConfig, layer_kind: str) -> Params:
+    if layer_kind == "moe":
+        return L.moe_init(key, cfg)
+    if layer_kind == "dense_pre_moe":
+        return L.mlp_init(key, cfg, d_ff=cfg.moe.dense_d_ff)
+    return L.mlp_init(key, cfg)
+
+
+def _ffn_apply(p, cfg: ArchConfig, x, ctx: ParallelCtx):
+    """x: [B,S,D] → (y, aux_loss)."""
+    if "experts" in p:
+        B, S, D = x.shape
+        x2 = x.reshape(B * S, D)
+        n_mesh = 1
+        if ctx.mesh is not None and ctx.model_axis is not None:
+            n_mesh = ctx.axis_size(ctx.model_axis)
+            for ax in ctx.data_axes:
+                n_mesh *= ctx.axis_size(ax)
+        if (B * S) % max(n_mesh, 1) != 0:
+            # tiny token counts (decode: B×1 tokens < mesh size) can't
+            # feed the token-sharded shard_map protocols — the dispatch
+            # tensors are tiny at this scale, local dispatch under GSPMD
+            # is both correct and cheap
+            y2, aux = L.moe_apply_local(p, cfg, x2)
+            return y2.reshape(B, S, D), aux
+        if ctx.moe_impl == "ep" and ctx.mesh is not None:
+            shard_map = jax.shard_map
+            mo = cfg.moe
+            tp = ctx.mesh.shape[ctx.model_axis]
+            all_axes = tuple(ctx.data_axes) + (ctx.model_axis,)
+            tok_spec = P(all_axes, None)
+            e_specs = {
+                "router": P(None, None),
+                "experts": {"wg": P(ctx.model_axis, None, None),
+                            "wu": P(ctx.model_axis, None, None),
+                            "wd": P(ctx.model_axis, None, None)},
+            }
+            if mo.n_shared:
+                e_specs["shared"] = {"wg": P(None, None), "wu": P(None, None),
+                                     "wd": P(None, None)}
+
+            def inner(pm, xs):
+                y, aux = L.moe_apply_ep(pm, cfg, xs, ctx.model_axis, tp)
+                for ax in all_axes:
+                    aux = lax.pmean(aux, ax)
+                return y, aux
+
+            y2, aux = shard_map(
+                inner, mesh=ctx.mesh,
+                in_specs=(e_specs, tok_spec),
+                out_specs=(tok_spec, P()),
+                check_vma=False)(p, x2)
+        elif ctx.moe_impl == "tp" and ctx.mesh is not None:
+            shard_map = jax.shard_map
+            mo = cfg.moe
+            all_axes = tuple(ctx.data_axes) + (ctx.model_axis,)
+            tok_spec = P(all_axes, None)
+            e_specs = {
+                "router": P(None, None),
+                "experts": {"wg": P(None, None, ctx.model_axis),
+                            "wu": P(None, None, ctx.model_axis),
+                            "wd": P(None, ctx.model_axis, None)},
+            }
+            if mo.n_shared:
+                e_specs["shared"] = {"wg": P(None, None), "wu": P(None, None),
+                                     "wd": P(None, None)}
+
+            def inner(pm, xs):
+                y, aux = L.moe_apply_tp(pm, cfg, xs, ctx.model_axis)
+                for ax in all_axes:
+                    aux = lax.pmean(aux, ax)
+                return y, aux
+
+            y2, aux = shard_map(
+                inner, mesh=ctx.mesh,
+                in_specs=(e_specs, tok_spec),
+                out_specs=(tok_spec, P()),
+                check_vma=False)(p, x2)
+        else:
+            y2, aux = L.moe_apply_local(p, cfg, x2)
+        return y2.reshape(B, S, D), aux
+    return L.mlp_apply(p, x), jnp.zeros((), jnp.float32)
+
+
+def decoder_layer_init(key, cfg: ArchConfig, layer_kind: str = "dense",
+                       cross: bool = False) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+        "ffn": _ffn_init(k2, cfg, layer_kind),
+    }
+    if cfg.mla is not None and not cross:
+        p["attn"] = L.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attention_init(k1, cfg, cross=cross)
+    return p
+
+
+def decoder_layer_apply(p, cfg: ArchConfig, x, *, positions, ctx,
+                        cache=None, cache_index=None, memory=None):
+    h = nn.rmsnorm(p["ln1"], x)
+    if cfg.mla is not None and memory is None:
+        a, new_cache = L.mla_apply(p["attn"], cfg, h, positions=positions,
+                                   cache=cache, cache_index=cache_index,
+                                   ctx=ctx)
+    else:
+        a, new_cache = L.attention_apply(
+            p["attn"], cfg, h, positions=positions, cache=cache,
+            cache_index=cache_index, memory=memory, ctx=ctx)
+    x = x + a
+    h = nn.rmsnorm(p["ln2"], x)
+    f, aux = _ffn_apply(p["ffn"], cfg, h, ctx)
+    x = ctx.constrain(x + f, ctx.residual_spec(x.shape[1]))
+    return x, new_cache, aux
+
+
+def mamba_layer_init(key, cfg: ArchConfig) -> Params:
+    return {"ln": nn.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "mix": L.mamba2_init(key, cfg)}
+
+
+def mamba_layer_apply(p, cfg: ArchConfig, x, *, ctx, cache=None):
+    h = nn.rmsnorm(p["ln"], x)
+    y, new_cache = L.mamba2_apply(p["mix"], cfg, h, cache=cache)
+    x = ctx.constrain(x + y, ctx.residual_spec(x.shape[1]))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {}
+
+    # --- frontend --------------------------------------------------------
+    if cfg.frontend == "audio_frames":
+        p["frontend_proj"] = nn.normal_init(
+            keys[0], (cfg.d_model, cfg.d_model), 0.02, dt)
+    else:
+        p["embed"] = nn.normal_init(keys[0], (cfg.vocab, cfg.d_model),
+                                    0.02, dt)
+
+    # --- blocks ------------------------------------------------------------
+    if cfg.block == "attn":
+        n_layers = cfg.n_layers
+        if cfg.cross_attn_every:
+            per = cfg.cross_attn_every
+            n_groups = n_layers // per
+            p["groups"] = {
+                "self": _stacked_init(
+                    keys[1], n_groups,
+                    lambda k: _stacked_init(
+                        k, per - 1, lambda k2: decoder_layer_init(k2, cfg))),
+                "cross": _stacked_init(
+                    keys[2], n_groups,
+                    lambda k: decoder_layer_init(k, cfg, cross=True)),
+            }
+        elif cfg.moe is not None and cfg.moe.first_moe_layer > 0:
+            p["pre"] = _stacked_init(
+                keys[1], cfg.moe.first_moe_layer,
+                lambda k: decoder_layer_init(k, cfg, "dense_pre_moe"))
+            p["blocks"] = _stacked_init(
+                keys[2], n_layers - cfg.moe.first_moe_layer,
+                lambda k: decoder_layer_init(k, cfg, "moe"))
+        else:
+            kind = "moe" if cfg.moe is not None else "dense"
+            p["blocks"] = _stacked_init(
+                keys[1], n_layers, lambda k: decoder_layer_init(k, cfg, kind))
+    elif cfg.block == "mamba2":
+        p["blocks"] = _stacked_init(
+            keys[1], cfg.n_layers, lambda k: mamba_layer_init(k, cfg))
+    elif cfg.block == "hybrid":
+        per = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // per
+        p["groups"] = _stacked_init(
+            keys[1], n_groups,
+            lambda k: _stacked_init(
+                k, per, lambda k2: mamba_layer_init(k2, cfg)))
+        # ONE weight-tied shared attention block (zamba2)
+        p["shared_attn"] = decoder_layer_init(keys[2], cfg, "dense")
+    else:
+        raise ValueError(cfg.block)
+
+    # --- head ---------------------------------------------------------------
+    p["final_norm"] = nn.rmsnorm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.normal_init(keys[3], (cfg.d_model, cfg.vocab),
+                                      0.02, dt)
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    """Abstract parameter tree (ShapeDtypeStruct leaves) — no allocation."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(p, cfg: ArchConfig, inputs: Dict[str, jnp.ndarray],
+           ctx: ParallelCtx) -> jnp.ndarray:
+    if cfg.frontend == "audio_frames":
+        x = inputs["features"].astype(jnp.dtype(cfg.param_dtype))
+        return x @ p["frontend_proj"]
+    tok = inputs["tokens"]
+    S = tok.shape[1]
+    n_batch_shards = 1
+    for ax in ctx.data_axes:
+        n_batch_shards *= ctx.axis_size(ax)
+    if (ctx.mesh is not None and ctx.model_axis is not None
+            and cfg.vocab % ctx.axis_size(ctx.model_axis) == 0 and S > 1
+            and tok.shape[0] % max(n_batch_shards, 1) == 0):
+        # shard_map lookup over the vocab-sharded table: each model shard
+        # looks up its vocab slice locally and a psum_scatter over the
+        # model axis lands the activations directly in sequence-parallel
+        # layout. A plain jnp.take's BACKWARD scatter-add makes GSPMD
+        # all-gather the full [B,S,D] cotangent onto every device
+        # (measured 21.5 GB/device f32 on deepseek); here the transpose is
+        # a local scatter + small psum of the table gradient.
+        tp = ctx.axis_size(ctx.model_axis)
+        seq_ok = S % tp == 0
+        bspec = ctx.data_axes if ctx.data_axes else None
+
+        def lookup(table, tok_l):
+            n_loc = table.shape[0]
+            start = lax.axis_index(ctx.model_axis) * n_loc
+            ids = tok_l - start
+            valid = (ids >= 0) & (ids < n_loc)
+            x = jnp.take(table, jnp.clip(ids, 0, n_loc - 1), axis=0)
+            x = jnp.where(valid[..., None], x, 0)
+            if seq_ok:
+                return lax.psum_scatter(
+                    x, ctx.model_axis, scatter_dimension=1, tiled=True)
+            return lax.psum(x, ctx.model_axis)
+
+        out_seq = P(bspec, ctx.model_axis, None) if seq_ok \
+            else P(bspec, None, None)
+        x = jax.shard_map(
+            lookup, mesh=ctx.mesh,
+            in_specs=(P(ctx.model_axis, None), P(bspec, None)),
+            out_specs=out_seq,
+            check_vma=False)(p["embed"], tok)
+        return x
+    x = jnp.take(p["embed"], tok, axis=0)
+    return x
+
+
+def _head(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = nn.rmsnorm(p["final_norm"], x)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return (x @ w).astype(jnp.float32)
+
+
+def forward(params: Params, cfg: ArchConfig, inputs: Dict[str, jnp.ndarray],
+            ctx: ParallelCtx = ParallelCtx()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward → (logits [B,S,V] f32, aux_loss)."""
+    x = _embed(params, cfg, inputs, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = ctx.constrain(x, ctx.residual_spec(S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.block == "attn" and cfg.cross_attn_every:
+        memory = inputs["vision_embeds"].astype(x.dtype)
+
+        def group(x, gp):
+            def self_body(h, lp):
+                h, _, aux = decoder_layer_apply(
+                    lp, cfg, h, positions=positions, ctx=ctx)
+                return h, aux
+            if ctx.remat:
+                self_body = jax.checkpoint(self_body)
+            x, auxs = lax.scan(self_body, x, gp["self"])
+            x, _, aux_c = decoder_layer_apply(
+                gp["cross"], cfg, x, positions=positions, ctx=ctx,
+                memory=memory)
+            return x, auxs.sum() + aux_c
+
+        def gbody(h, gp):
+            h, aux = group(h, gp)
+            return h, aux
+        if ctx.remat:
+            gbody = jax.checkpoint(gbody)
+        x, auxs = lax.scan(gbody, x, params["groups"])
+        aux_total += auxs.sum()
+
+    elif cfg.block == "attn":
+        if "pre" in params:
+            def pre_body(h, lp):
+                h, _, aux = decoder_layer_apply(
+                    lp, cfg, h, positions=positions, ctx=ctx)
+                return h, aux
+            if ctx.remat:
+                pre_body = jax.checkpoint(pre_body)
+            x, auxs = lax.scan(pre_body, x, params["pre"])
+            aux_total += auxs.sum()
+
+        def body(h, lp):
+            h, _, aux = decoder_layer_apply(
+                lp, cfg, h, positions=positions, ctx=ctx)
+            return h, aux
+        if ctx.remat:
+            body = jax.checkpoint(body)
+        x, auxs = lax.scan(body, x, params["blocks"])
+        aux_total += auxs.sum()
+
+    elif cfg.block == "mamba2":
+        def mbody(h, lp):
+            h, _ = mamba_layer_apply(lp, cfg, h, ctx=ctx)
+            return h, None
+        if ctx.remat:
+            mbody = jax.checkpoint(mbody)
+        x, _ = lax.scan(mbody, x, params["blocks"])
+
+    elif cfg.block == "hybrid":
+        def hgroup(h, gp):
+            def mbody(hh, lp):
+                hh, _ = mamba_layer_apply(lp, cfg, hh, ctx=ctx)
+                return hh, None
+            if ctx.remat:
+                mbody = jax.checkpoint(mbody)
+            h, _ = lax.scan(mbody, h, gp)
+            h, _, aux = decoder_layer_apply(
+                params["shared_attn"], cfg, h, positions=positions, ctx=ctx)
+            return h, aux
+        if ctx.remat:
+            hgroup = jax.checkpoint(hgroup)
+        x, auxs = lax.scan(hgroup, x, params["groups"])
+        aux_total += auxs.sum()
+
+    logits = _head(params, cfg, x)
+    return logits, aux_total
+
+
+def loss_fn(params: Params, cfg: ArchConfig,
+            batch: Dict[str, jnp.ndarray],
+            ctx: ParallelCtx = ParallelCtx(),
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    """Mean token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(params, cfg, batch, ctx)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Params:
+    """Cache pytree for autoregressive decode (zeros, or ShapeDtypeStruct
+    when ``abstract`` — the dry-run path)."""
+    dt = jnp.dtype(cfg.resolved_kv_cache_dtype)  # attn K/V storage
+    pdt = jnp.dtype(cfg.param_dtype)      # conv states etc.
+    hd = cfg.resolved_head_dim
+
+    def mk(shape, dtype=dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if cfg.block == "attn":
+        n = cfg.n_layers
+        if cfg.window > 0:
+            # sliding-window archs keep an O(window) ring cache
+            max_len = min(max_len, cfg.window)
+        if cfg.mla is not None:
+            m = cfg.mla
+            cache = {
+                "c": mk((n, batch, max_len, m.kv_lora_rank)),
+                "r": mk((n, batch, max_len, 1, m.qk_rope_dim)),
+            }
+        elif cfg.cross_attn_every:
+            per = cfg.cross_attn_every
+            ng = n // per
+            cache = {
+                "k": mk((ng, per - 1, batch, max_len, cfg.n_kv_heads, hd)),
+                "v": mk((ng, per - 1, batch, max_len, cfg.n_kv_heads, hd)),
+                "cross_k": mk((ng, batch, cfg.vision_tokens,
+                               cfg.n_kv_heads, hd)),
+                "cross_v": mk((ng, batch, cfg.vision_tokens,
+                               cfg.n_kv_heads, hd)),
+            }
+        else:
+            cache = {
+                "k": mk((n, batch, max_len, cfg.n_kv_heads, hd)),
+                "v": mk((n, batch, max_len, cfg.n_kv_heads, hd)),
+            }
+    elif cfg.block == "mamba2":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        gn = s.n_groups * s.d_state
+        cache = {
+            "conv_x": mk((cfg.n_layers, batch, s.d_conv - 1, di), pdt),
+            "conv_b": mk((cfg.n_layers, batch, s.d_conv - 1, gn), pdt),
+            "conv_c": mk((cfg.n_layers, batch, s.d_conv - 1, gn), pdt),
+            "ssd": mk((cfg.n_layers, batch, s.n_heads(cfg.d_model),
+                       s.d_state, s.head_dim), jnp.float32),
+        }
+    elif cfg.block == "hybrid":
+        s = cfg.ssm
+        per = cfg.hybrid_attn_every
+        ng = cfg.n_layers // per
+        di = s.d_inner(cfg.d_model)
+        gn = s.n_groups * s.d_state
+        cache = {
+            "conv_x": mk((ng, per, batch, s.d_conv - 1, di), pdt),
+            "conv_b": mk((ng, per, batch, s.d_conv - 1, gn), pdt),
+            "conv_c": mk((ng, per, batch, s.d_conv - 1, gn), pdt),
+            "ssd": mk((ng, per, batch, s.n_heads(cfg.d_model),
+                       s.d_state, s.head_dim), jnp.float32),
+            "k": mk((ng, batch, max_len, cfg.n_kv_heads, hd)),
+            "v": mk((ng, batch, max_len, cfg.n_kv_heads, hd)),
+        }
+    else:
+        raise ValueError(cfg.block)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                inputs: Dict[str, jnp.ndarray], cache_index: jnp.ndarray,
+                ctx: ParallelCtx = ParallelCtx(),
+                logits_mode: str = "all") -> Tuple[jnp.ndarray, Params]:
+    """One autoregressive step: new token(s) → (logits [B,S,V], cache').
+
+    ``logits_mode="last"`` applies the LM head only to the final position
+    (prefill: avoids materializing [B, S, V] logits for a 32k prompt).
+    """
+    x = _embed(params, cfg, inputs, ctx)
+    B, S, _ = x.shape
+    positions = cache_index + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    new_cache = dict(cache)
+
+    if cfg.block == "attn" and cfg.cross_attn_every:
+        def gbody(h, gp_and_cache):
+            gp, ck, cv, xk, xv = gp_and_cache
+
+            def sbody(hh, lp_and_c):
+                lp, k1, v1 = lp_and_c
+                hh, nc, _ = decoder_layer_apply(
+                    lp, cfg, hh, positions=positions, ctx=ctx,
+                    cache=(k1, v1), cache_index=cache_index)
+                return hh, nc
+            h, kv = lax.scan(sbody, h, (gp["self"], ck, cv))
+            # cross layer: reuse prefilled cross K/V directly
+            hh = nn.rmsnorm(gp["cross"]["ln1"], h)
+            q = (hh @ gp["cross"]["attn"]["wq"]).reshape(
+                B, S, cfg.n_heads, cfg.resolved_head_dim)
+            out = L.blockwise_attention(q, xk, xv, causal=False)
+            out = out.reshape(B, S, -1) @ gp["cross"]["attn"]["wo"]
+            h = h + out
+            hh = nn.rmsnorm(gp["cross"]["ln2"], h)
+            f, _ = _ffn_apply(gp["cross"]["ffn"], cfg, hh, ctx)
+            h = h + f
+            return h, kv
+        x, kvs = lax.scan(gbody, x, (params["groups"], cache["k"],
+                                     cache["v"], cache["cross_k"],
+                                     cache["cross_v"]))
+        new_cache["k"], new_cache["v"] = kvs
+
+    elif cfg.block == "attn":
+        offset = 0
+        if "pre" in params:
+            npre = cfg.moe.first_moe_layer
+            if cfg.mla is not None:
+                def pbody(h, lpc):
+                    lp, c1, r1 = lpc
+                    h, nc, _ = decoder_layer_apply(
+                        lp, cfg, h, positions=positions, ctx=ctx,
+                        cache=(c1, r1), cache_index=cache_index)
+                    return h, nc
+                x, crs = lax.scan(pbody, x, (params["pre"],
+                                             cache["c"][:npre],
+                                             cache["r"][:npre]))
+                pre_c, pre_r = crs
+            offset = npre
+
+        if cfg.mla is not None:
+            def body(h, lpc):
+                lp, c1, r1 = lpc
+                h, nc, _ = decoder_layer_apply(
+                    lp, cfg, h, positions=positions, ctx=ctx,
+                    cache=(c1, r1), cache_index=cache_index)
+                return h, nc
+            x, crs = lax.scan(body, x, (params["blocks"],
+                                        cache["c"][offset:],
+                                        cache["r"][offset:]))
+            cs, rs = crs
+            if offset:
+                cs = jnp.concatenate([pre_c, cs], axis=0)
+                rs = jnp.concatenate([pre_r, rs], axis=0)
+            new_cache["c"], new_cache["r"] = cs, rs
+        else:
+            def body(h, lpc):
+                lp, k1, v1 = lpc
+                h, nc, _ = decoder_layer_apply(
+                    lp, cfg, h, positions=positions, ctx=ctx,
+                    cache=(k1, v1), cache_index=cache_index)
+                return h, nc
+            x, kvs = lax.scan(body, x, (params["blocks"], cache["k"],
+                                        cache["v"]))
+            new_cache["k"], new_cache["v"] = kvs
+
+    elif cfg.block == "mamba2":
+        def mbody(h, lpc):
+            lp, cx, cb, cc, sd = lpc
+            h, nc = mamba_layer_apply(lp, cfg, h, ctx=ctx,
+                                      cache=((cx, cb, cc), sd))
+            return h, nc
+        x, st = lax.scan(mbody, x, (params["blocks"], cache["conv_x"],
+                                    cache["conv_b"], cache["conv_c"],
+                                    cache["ssd"]))
+        (new_cache["conv_x"], new_cache["conv_b"],
+         new_cache["conv_c"]), new_cache["ssd"] = st
+
+    elif cfg.block == "hybrid":
+        def gbody(h, gpc):
+            gp, cx, cb, cc, sd, k1, v1 = gpc
+
+            def mbody(hh, lpc):
+                lp, c1, c2, c3, s1 = lpc
+                hh, nc = mamba_layer_apply(lp, cfg, hh, ctx=ctx,
+                                           cache=((c1, c2, c3), s1))
+                return hh, nc
+            h, st = lax.scan(mbody, h, (gp, cx, cb, cc, sd))
+            h, akv, _ = decoder_layer_apply(
+                params["shared_attn"], cfg, h, positions=positions,
+                ctx=ctx, cache=(k1, v1), cache_index=cache_index)
+            (ncx, ncb, ncc), nsd = st
+            return h, (ncx, ncb, ncc, nsd, akv[0], akv[1])
+        x, sts = lax.scan(gbody, x, (params["groups"], cache["conv_x"],
+                                     cache["conv_b"], cache["conv_c"],
+                                     cache["ssd"], cache["k"], cache["v"]))
+        (new_cache["conv_x"], new_cache["conv_b"], new_cache["conv_c"],
+         new_cache["ssd"], new_cache["k"], new_cache["v"]) = sts
+
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = _head(params, cfg, x)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ArchConfig,
+            inputs: Dict[str, jnp.ndarray], max_len: int,
+            ctx: ParallelCtx = ParallelCtx()
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Process a prompt, building the decode cache. Returns (logits, cache).
+
+    Implemented as decode_step over the full prompt with a fresh cache —
+    one code path, no prefill/decode divergence to keep in sync.
+    """
+    B = (inputs.get("tokens") if "tokens" in inputs
+         else inputs["features"]).shape[0]
+    cache = init_cache(cfg, B, max_len)
+    if cfg.block == "attn" and cfg.cross_attn_every:
+        # seed cross-attn K/V from the vision memory
+        mem = inputs["vision_embeds"].astype(jnp.dtype(cfg.param_dtype))
+        ng = cfg.n_layers // cfg.cross_attn_every
+        hd = cfg.resolved_head_dim
+
+        def seed(gp):
+            k = (mem @ gp["cross"]["attn"]["wk"]).reshape(
+                B, cfg.vision_tokens, cfg.n_kv_heads, hd)
+            v = (mem @ gp["cross"]["attn"]["wv"]).reshape(
+                B, cfg.vision_tokens, cfg.n_kv_heads, hd)
+            return k, v
+        ks, vs = jax.vmap(seed)(params["groups"])
+        cache["cross_k"], cache["cross_v"] = ks, vs
+    logits, cache = decode_step(params, cfg, cache, inputs,
+                                jnp.zeros((), jnp.int32), ctx,
+                                logits_mode="last")
+    return logits, cache

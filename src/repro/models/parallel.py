@@ -1,0 +1,94 @@
+"""ParallelCtx — how a forward pass distributes itself.
+
+Lives in its own module so both ``repro.models.layers`` (which needs
+sharding constraints at SP↔TP transitions) and ``repro.models.lm`` can
+import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """``mesh`` may be None (single-device smoke tests). ``data_axes``
+    shard the batch dim; ``model_axis`` shards heads / ffn / vocab /
+    experts; ``seq_axis`` (sequence parallelism) shards the sequence dim
+    of the *residual stream* between layers."""
+
+    mesh: Optional[Any] = None
+    data_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    #: "ep" | "tp" | "local" — MoE dispatch strategy
+    moe_impl: str = "local"
+    #: rematerialize each layer in backward (activation checkpointing)
+    remat: bool = False
+    #: shard the sequence dim of the residual stream over this axis
+    #: (Megatron-style sequence parallelism; the saved scan carries shrink
+    #: by tp× — required for the 236B/314B train cells to fit 16 GB HBM)
+    seq_axis: Optional[str] = None
+
+    @property
+    def batch_spec(self):
+        return P(self.data_axes if self.data_axes else None)
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    def constrain(self, x, spec):
+        if self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def residual_spec(self, seq_len: int):
+        seq = self.seq_axis
+        if seq is not None and self.mesh is not None:
+            if seq_len % self.mesh.shape[seq] != 0 or seq_len <= 1:
+                seq = None
+        return P(self.data_axes if self.data_axes else None, seq, None)
+
+    # ---- attention-internal constraints (SP↔TP transitions) -------------
+    def heads(self, x, n_heads: int):
+        """Constrain [B, S, H, D] to head-sharding — this pins the reshape
+        between (B,S,H·D) and (B,S,H,D) to ONE sharding so GSPMD never
+        falls back to full rematerialization (measured: 137 GB/device
+        replicated q/kv tensors on deepseek without this).
+
+        UNEVEN head counts still shard over 'model' when the padding
+        waste is small: yi's 56 q-heads pad to 64 (14 % waste) and that
+        beats the alternative — GSPMD seq-resharding every layer cost
+        2.6 TB/device of all-gathers on yi-34b train_4k (§Perf A1). But
+        kv=8 on a 16-way axis would DOUBLE the kv tensors (100 % waste),
+        which measurably regressed the kv-heavy prefill cells (§Perf A2)
+        — those fall back to sequence sharding. Threshold: waste ≤ 1/3."""
+        if self.mesh is None or self.model_axis is None:
+            return x
+        tp = self.axis_size(self.model_axis)
+        padded = -(-n_heads // tp) * tp
+        waste = (padded - n_heads) / max(n_heads, 1)
+        h = self.model_axis if waste <= 1 / 3 else None
+        s = None
+        if h is None and self.seq_axis is not None and \
+                x.shape[1] % self.axis_size(self.seq_axis) == 0 and \
+                x.shape[1] > 1:
+            s = self.seq_axis
+        return self.constrain(
+            x, P(self.data_axes if self.data_axes else None, s, h, None))
+
+    def flat_heads(self, x, flat_dim: int):
+        """Constrain [B, S, H·D] activations to model-sharding on the
+        flattened head dim."""
+        if self.mesh is None or self.model_axis is None:
+            return x
+        tp = self.axis_size(self.model_axis)
+        m = self.model_axis if flat_dim % tp == 0 else None
+        return self.constrain(
+            x, P(self.data_axes if self.data_axes else None, None, m))

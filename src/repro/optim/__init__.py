@@ -1,0 +1,3 @@
+from .optimizers import (adamw, adam, adafactor, sgd, OptState, Optimizer,
+                         clip_by_global_norm)
+from .schedules import constant, cosine_warmup, linear_warmup

@@ -1,0 +1,2 @@
+from .devices import DEVICES, DeviceProfile
+from .cost_model import estimate, CostEstimate

@@ -1,0 +1,2 @@
+from .analysis import (analyze_hlo, roofline_terms, RooflineReport,
+                       parse_collectives, V5E)

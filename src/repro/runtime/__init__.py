@@ -1,0 +1,4 @@
+from .compression import (int8_compress, int8_decompress,
+                          compressed_grad_allreduce)
+from .fault import TrainingSupervisor, HeartbeatMonitor, FailureInjector
+from .elastic import reshard_state, elastic_restart_plan

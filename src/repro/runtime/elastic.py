@@ -1,0 +1,68 @@
+"""Elastic scaling: re-mesh a running job onto a different device count.
+
+Losing a pod shouldn't lose the run: checkpoints are mesh-agnostic
+(``repro.checkpoint`` stores logical arrays), so the restart plan is
+1) pick the largest healthy mesh, 2) rebuild shardings from the SAME
+partition rules on the new mesh, 3) ``device_put`` the restored state.
+Global batch is preserved by raising gradient-accumulation microbatches
+to compensate for lost data-parallel ways.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..models.config import ArchConfig
+from ..sharding import ShardingPolicy, param_partition_specs
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    microbatches: int
+    note: str
+
+
+def elastic_restart_plan(n_healthy_devices: int, *,
+                         model_parallel: int = 16,
+                         global_batch: int = 256,
+                         prev_microbatches: int = 1) -> ElasticPlan:
+    """Largest (data, model) mesh that fits the healthy device count,
+    keeping the model-parallel degree fixed (weights must still fit) and
+    scaling microbatches so the global batch stays constant."""
+    if n_healthy_devices < model_parallel:
+        raise ValueError(
+            f"need ≥{model_parallel} devices for model parallelism, "
+            f"have {n_healthy_devices}")
+    data = n_healthy_devices // model_parallel
+    # keep data a power-of-two divisor of the global batch
+    while data > 1 and global_batch % data != 0:
+        data -= 1
+    lost_factor = max(1, (global_batch // data) //
+                      max(global_batch // (data * prev_microbatches), 1))
+    micro = prev_microbatches * lost_factor
+    return ElasticPlan(
+        mesh_shape=(data, model_parallel),
+        mesh_axes=("data", "model"),
+        microbatches=micro,
+        note=f"data={data} model={model_parallel}; microbatches→{micro} "
+             f"to hold global_batch={global_batch}",
+    )
+
+
+def reshard_state(state: Any, cfg: ArchConfig, new_mesh,
+                  policy: Optional[ShardingPolicy] = None) -> Any:
+    """device_put a (restored) state pytree onto a new mesh using the same
+    partition rules — the mechanics of elastic downscale/upscale."""
+    policy = policy or ShardingPolicy(
+        data_axes=tuple(a for a in new_mesh.axis_names
+                        if a in ("pod", "data")),
+        model_axis="model")
+    specs = param_partition_specs(state, cfg, policy)
+    shardings = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(new_mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.device_put(state, shardings)

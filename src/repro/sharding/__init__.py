@@ -1,0 +1,2 @@
+from .rules import (param_partition_specs, batch_specs, cache_specs,
+                    named_shardings, ShardingPolicy)

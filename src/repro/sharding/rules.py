@@ -1,0 +1,241 @@
+"""Partition rules: FSDP('data') × TP('model') × EP, pod-level DP.
+
+The rules pattern-match parameter-tree paths (leaf names are stable across
+all architectures — see ``repro.models.layers``) and emit a
+``PartitionSpec`` aligned to each leaf's *trailing* dims, so stacked scan
+parameters (leading layer axis) and group-stacks (two leading axes) get
+``None`` on the stack dims automatically.
+
+Policy summary (single pod: mesh ('data', 'model'); multi-pod adds a pure
+data-parallel 'pod' axis — parameters are replicated across pods,
+gradients all-reduce over ('pod', 'data')):
+
+=====================  ==========================================
+embed (V, D)           ('model', fsdp)      vocab-parallel
+lm_head (D, V)         (fsdp, 'model')
+attention wq (D, H·hd) (fsdp, 'model')      head-parallel
+attention wk/wv        (fsdp, 'model')
+attention wo (H·hd, D) ('model', fsdp)
+MLA lora a/b           (fsdp, None) / (fsdp, 'model')
+mlp wg/wu (D, F)       (fsdp, 'model')
+mlp wd (F, D)          ('model', fsdp)
+MoE experts [EP]       ('model', fsdp, ...)  expert-parallel
+MoE experts [TP]       (None, fsdp, 'model') intra-expert parallel
+mamba in_proj (D, Di)  (fsdp, 'model')      head/channel-parallel
+mamba out_proj (Di, D) ('model', fsdp)
+norms / scalars        replicated
+=====================  ==========================================
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+
+
+class ShardingPolicy:
+    """Holds axis names + toggles; produces specs for params/batch/cache."""
+
+    def __init__(self, *, data_axes: Tuple[str, ...] = ("data",),
+                 model_axis: str = "model",
+                 fsdp: bool = True,
+                 fsdp_axis: Optional[str] = None,
+                 batch_axes: Optional[Tuple[str, ...]] = None,
+                 axis_sizes: Optional[Dict[str, int]] = None):
+        self.data_axes = tuple(data_axes)
+        self.model_axis = model_axis
+        # FSDP shards params over one data axis (the intra-pod one)
+        self.fsdp_axis = (fsdp_axis or self.data_axes[-1]) if fsdp else None
+        # batch sharding axes may be narrower than data axes (batch=1 decode)
+        self._batch_axes = (tuple(batch_axes) if batch_axes is not None
+                            else self.data_axes)
+        #: mesh axis sizes — lets the rules drop shardings whose axis
+        #: doesn't divide the dim (hubert's 504-class head on a 16-way
+        #: model axis, yi's 56 heads, ...)
+        self.axis_sizes = dict(axis_sizes or {})
+
+    def _sanitize(self, spec: P, shape) -> P:
+        if not self.axis_sizes:
+            return spec
+        dims = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                dims.append(entry)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= self.axis_sizes.get(a, 1)
+            dims.append(entry if shape[i] % size == 0 else None)
+        return P(*dims)
+
+    @property
+    def batch_axes(self):
+        return self._batch_axes
+
+    # -- per-leaf rule -----------------------------------------------------
+    def leaf_spec(self, path: str, ndim: int, shape,
+                  moe_sharding: str = "ep") -> P:
+        f = self.fsdp_axis
+        m = self.model_axis
+        name = path.split("/")[-1]
+
+        def pad(spec_tail):
+            """left-pad with None for stacked scan/group leading axes."""
+            lead = ndim - len(spec_tail)
+            return P(*([None] * lead + list(spec_tail)))
+
+        # ---- MoE experts (stacked leaf paths contain 'experts') ----------
+        if "experts" in path:
+            if moe_sharding == "ep":
+                if name in ("wg", "wu"):
+                    return pad([m, f, None])
+                if name == "wd":
+                    return pad([m, None, f])
+            else:  # intra-expert TP
+                if name in ("wg", "wu"):
+                    return pad([None, f, m])
+                if name == "wd":
+                    return pad([None, m, f])
+        if name == "router":
+            return pad([None, None])
+
+        # ---- embeddings / head -------------------------------------------
+        if name == "embed":
+            return pad([m, f])
+        if name == "lm_head":
+            return pad([f, m])
+        if name == "frontend_proj":
+            return pad([f, m]) if False else pad([f, None])
+
+        # ---- attention ------------------------------------------------------
+        if name in ("wq", "wk", "wv", "wq_b", "wkv_b"):
+            return pad([f, m])
+        if name in ("wq_a", "wkv_a"):
+            return pad([f, None])
+        if name == "wo":
+            return pad([m, f])
+        if name in ("bq", "bk", "bv"):
+            return pad([m])
+
+        # ---- dense mlp -------------------------------------------------------
+        if name in ("wg", "wu"):
+            return pad([f, m])
+        if name == "wd":
+            return pad([m, f])
+
+        # ---- mamba2 ---------------------------------------------------------
+        if name in ("wz", "wx"):
+            return pad([f, m])
+        if name in ("wb", "wc"):
+            return pad([f, None])     # n_groups·d_state is tiny: replicate
+        if name == "wdt":
+            return pad([f, m])
+        if name == "out_proj":
+            return pad([m, f])
+        if name == "conv_x":
+            return pad([None, m])
+        if name == "conv_xb":
+            return pad([m])
+        if name in ("conv_bw", "conv_cw"):
+            return pad([None, None])
+        if name in ("conv_bb", "conv_cb"):
+            return pad([None])
+        if name in ("dt_bias", "A_log", "D"):
+            return pad([m])
+
+        # ---- norms / everything 1-dim: replicate -------------------------
+        return pad([None] * min(ndim, 1)) if ndim <= 1 else pad(
+            [None] * ndim)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def param_partition_specs(params_or_specs, cfg: ArchConfig,
+                          policy: ShardingPolicy):
+    """PartitionSpec pytree matching the parameter tree."""
+    moe_mode = cfg.moe.sharding if cfg.moe is not None else "ep"
+    flat, treedef = _tree_paths(params_or_specs)
+    specs = [policy._sanitize(
+        policy.leaf_spec(path, getattr(leaf, "ndim", len(leaf.shape)),
+                         leaf.shape, moe_mode), leaf.shape)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ArchConfig, policy: ShardingPolicy):
+    """Input-batch PartitionSpecs (tokens/labels/features/vision)."""
+    b = P(policy.batch_axes)
+    bs = P(policy.batch_axes, None)
+    bsd = P(policy.batch_axes, None, None)
+    specs = {"labels": bs, "loss_mask": bs}
+    if cfg.frontend == "audio_frames":
+        specs["features"] = bsd
+    else:
+        specs["tokens"] = bs
+    if cfg.frontend == "tokens+vision":
+        specs["vision_embeds"] = bsd
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, policy: ShardingPolicy,
+                tp: int = 16):
+    """Decode-cache PartitionSpecs (mirror ``lm.init_cache`` structure).
+
+    Explicit jit in_shardings require divisibility: when ``n_kv_heads``
+    doesn't divide the model axis (qwen kv=2, yi/grok/danube/vision kv=8 on
+    tp=16), the KV cache shards its *sequence* dim over 'model' instead —
+    memory still spreads across all chips; attention over seq-sharded KV
+    is GSPMD's flash-decode-style gather (a hillclimb target, see §Perf).
+    """
+    d = policy.batch_axes
+    m = policy.model_axis
+    heads_ok = cfg.n_kv_heads % tp == 0
+    hspec = (None, m, None) if heads_ok else (m, None, None)
+    if cfg.block == "attn":
+        if cfg.mla is not None:
+            return {"c": P(None, d, None, m),
+                    "r": P(None, d, m, None, None)}
+        if cfg.cross_attn_every:
+            return {"k": P(None, None, d, *hspec),
+                    "v": P(None, None, d, *hspec),
+                    "cross_k": P(None, d, *hspec),
+                    "cross_v": P(None, d, *hspec)}
+        return {"k": P(None, d, *hspec),
+                "v": P(None, d, *hspec)}
+    if cfg.block == "mamba2":
+        return {"conv_x": P(None, d, None, m),
+                "conv_b": P(None, d, None, None),
+                "conv_c": P(None, d, None, None),
+                "ssd": P(None, d, m, None, None)}
+    if cfg.block == "hybrid":
+        return {"conv_x": P(None, None, d, None, m),
+                "conv_b": P(None, None, d, None, None),
+                "conv_c": P(None, None, d, None, None),
+                "ssd": P(None, None, d, m, None, None),
+                "k": P(None, d, None, m, None),
+                "v": P(None, d, None, m, None)}
+    raise ValueError(cfg.block)
+
+
+def named_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

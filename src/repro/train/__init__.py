@@ -1,0 +1,1 @@
+from .gnn_trainer import TrainConfig, train_pmgns, evaluate, predict_batch

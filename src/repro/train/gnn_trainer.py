@@ -1,0 +1,175 @@
+"""PMGNS training loop (paper §4.3, Table 3 settings).
+
+Settings faithful to the paper: Adam, lr 2.754e-5 (their LR-finder value),
+Huber loss, dropout 0.05, hidden 512, 70/15/15 split, MAPE metric. The
+paper trains 10 epochs for the GNN comparison (Table 4) and 500 epochs for
+the headline 1.9 % MAPE; both are reachable via ``TrainConfig.epochs``.
+
+Targets are regressed in log1p space (4+ orders of magnitude spread);
+MAPE is always computed in physical units after decoding, like the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batching import GraphSample, batches_by_bucket, collate
+from ..core.gnn import (PMGNSConfig, decode_targets, encode_targets, huber,
+                        mape, pmgns_apply, pmgns_init)
+from ..optim import adam, constant
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 10
+    batch_size: int = 32
+    lr: float = 2.754e-5          # paper Table 3
+    huber_delta: float = 1.0
+    seed: int = 0
+    log_every: int = 0            # 0 = silent
+    grad_clip: Optional[float] = None
+
+
+def _loss_fn(params, cfg: PMGNSConfig, batch, rng, delta, mean, std):
+    pred = pmgns_apply(params, cfg, batch, train=True, rng=rng)
+    target = (encode_targets(batch["y"]) - mean) / std
+    return jnp.mean(huber(pred, target, delta))
+
+
+def _target_stats(samples):
+    """Per-target mean/std of the log-space labels over the train set.
+    Training on standardized targets converges in O(100) steps instead of
+    O(10k); the stats are FOLDED into the last FC layer afterwards
+    (w'=w·σ, b'=b·σ+μ) so the saved model still predicts raw log-space —
+    downstream code (DIPPM API, eval) is unchanged."""
+    ys = np.stack([np.asarray(encode_targets(jnp.asarray(s.y)))
+                   for s in samples])
+    mean = ys.mean(axis=0)
+    std = np.maximum(ys.std(axis=0), 1e-3)
+    return jnp.asarray(mean, jnp.float32), jnp.asarray(std, jnp.float32)
+
+
+def _fold_stats(params, cfg: PMGNSConfig, mean, std):
+    import jax as _jax
+    params = _jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    last = f"b{cfg.n_fc_blocks - 1}"
+    head = dict(params["fc"][last])
+    head["w"] = head["w"] * std[None, :]
+    head["b"] = head["b"] * std + mean
+    fc = dict(params["fc"])
+    fc[last] = head
+    out = dict(params)
+    out["fc"] = fc
+    return out
+
+
+@partial(jax.jit, static_argnames=("cfg", "delta"))
+def _eval_batch(params, cfg: PMGNSConfig, batch, delta: float = 1.0):
+    pred = pmgns_apply(params, cfg, batch, train=False)
+    target = encode_targets(batch["y"])
+    loss = jnp.mean(huber(pred, target, delta))
+    pred_phys = decode_targets(pred)
+    # per-target absolute percentage errors, summed (averaged outside)
+    denom = jnp.maximum(jnp.abs(batch["y"]), 1e-6)
+    ape = jnp.abs(pred_phys - batch["y"]) / denom       # [B, 3]
+    return loss, ape
+
+
+def evaluate(params, cfg: PMGNSConfig, samples: Sequence[GraphSample],
+             batch_size: int = 32) -> Dict[str, float]:
+    """Loss + overall and per-target MAPE over a sample set."""
+    batches = batches_by_bucket(list(samples), batch_size)
+    losses, apes = [], []
+    for b in batches:
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, ape = _eval_batch(params, cfg, jb)
+        losses.append(float(loss) * ape.shape[0])
+        apes.append(np.asarray(ape))
+    if not apes:
+        return {"loss": float("nan"), "mape": float("nan")}
+    ape_all = np.concatenate(apes, axis=0)
+    n = ape_all.shape[0]
+    out = {
+        "loss": float(np.sum(losses) / n),
+        "mape": float(ape_all.mean()),
+        "mape_latency": float(ape_all[:, 0].mean()),
+        "mape_energy": float(ape_all[:, 1].mean()),
+        "mape_memory": float(ape_all[:, 2].mean()),
+        "n": n,
+    }
+    return out
+
+
+def predict_batch(params, cfg: PMGNSConfig,
+                  samples: Sequence[GraphSample]) -> np.ndarray:
+    """Physical-unit predictions [n, 3] for a list of samples."""
+    preds = []
+    for s in samples:
+        b = collate([s])
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "y"}
+        p = pmgns_apply(params, cfg, jb, train=False)
+        preds.append(np.asarray(decode_targets(p))[0])
+    return np.stack(preds)
+
+
+def train_pmgns(
+    model_cfg: PMGNSConfig,
+    train_samples: Sequence[GraphSample],
+    val_samples: Sequence[GraphSample] = (),
+    cfg: TrainConfig = TrainConfig(),
+) -> Tuple[Params, List[Dict[str, float]]]:
+    """Train the PMGNS; returns (params, per-epoch history)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    key, init_key = jax.random.split(key)
+    params = pmgns_init(init_key, model_cfg)
+    opt = adam(constant(cfg.lr))
+    opt_state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    t_mean, t_std = _target_stats(list(train_samples))
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(_loss_fn),
+        static_argnames=("cfg", "delta"))
+
+    @partial(jax.jit, static_argnames=())
+    def apply_update(step, opt_state, params, grads):
+        return opt.update(step, opt_state, params, grads)
+
+    history: List[Dict[str, float]] = []
+    rng = np.random.default_rng(cfg.seed + 1)
+    for epoch in range(cfg.epochs):
+        t0 = time.time()
+        batches = batches_by_bucket(list(train_samples), cfg.batch_size,
+                                    rng=rng)
+        epoch_loss, n_seen = 0.0, 0
+        for b in batches:
+            jb = {k: jnp.asarray(v) for k, v in b.items()}
+            key, sub = jax.random.split(key)
+            loss, grads = grad_fn(params, model_cfg, jb, sub,
+                                  cfg.huber_delta, t_mean, t_std)
+            params, opt_state = apply_update(step, opt_state, params, grads)
+            step = step + 1
+            bsz = b["x"].shape[0]
+            epoch_loss += float(loss) * bsz
+            n_seen += bsz
+        rec = {"epoch": epoch, "train_loss": epoch_loss / max(n_seen, 1),
+               "seconds": time.time() - t0}
+        if val_samples:
+            folded = _fold_stats(params, model_cfg, t_mean, t_std)
+            rec.update({f"val_{k}": v for k, v in
+                        evaluate(folded, model_cfg, val_samples,
+                                 cfg.batch_size).items()})
+        history.append(rec)
+        if cfg.log_every and (epoch % cfg.log_every == 0):
+            print(f"[pmgns] epoch {epoch}: "
+                  + " ".join(f"{k}={v:.4g}" for k, v in rec.items()
+                             if k != "epoch"))
+    return _fold_stats(params, model_cfg, t_mean, t_std), history

@@ -1,0 +1,1 @@
+from .families import FAMILIES, build_family, family_variants

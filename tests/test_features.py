@@ -1,0 +1,55 @@
+"""Node Feature Generator + Static Feature Generator invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ir import OP_VOCAB, OpNode, OpGraph
+from repro.core.node_features import (NODE_FEATURE_DIM, node_feature,
+                                      node_feature_matrix)
+from repro.core.static_features import STATIC_FEATURE_DIM, static_features
+
+
+def _node(op="dense", shape=(4, 8), **kw):
+    return OpNode(0, op, shape, **kw)
+
+
+def test_feature_dim_is_32():
+    assert NODE_FEATURE_DIM == 32  # paper §3.2
+
+
+def test_one_hot_segment():
+    for i, op in enumerate(OP_VOCAB):
+        f = node_feature(_node(op=op))
+        oh = f[:len(OP_VOCAB)]
+        assert oh[i] == 1.0 and oh.sum() == 1.0
+
+
+@given(st.sampled_from(OP_VOCAB),
+       st.lists(st.integers(1, 512), min_size=1, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_features_finite_and_fixed_length(op, shape):
+    f = node_feature(_node(op=op, shape=tuple(shape)))
+    assert f.shape == (32,)
+    assert np.isfinite(f).all()
+
+
+def test_static_features_eq1():
+    g = OpGraph(
+        nodes=[OpNode(0, "conv", (1, 8, 8, 4), macs=100.0),
+               OpNode(1, "relu", (1, 8, 8, 4)),
+               OpNode(2, "dense", (1, 10), macs=50.0)],
+        edges=[(0, 1), (1, 2)],
+        meta={"batch": 16},
+    )
+    f = static_features(g)
+    assert f.shape == (STATIC_FEATURE_DIM,)
+    assert f[0] == pytest.approx(np.log1p(150.0))   # F_mac
+    assert f[1] == pytest.approx(np.log1p(16))      # F_batch
+    assert f[2] == 1 and f[3] == 1 and f[4] == 1    # counts
+
+
+def test_feature_matrix_shape():
+    g = OpGraph(nodes=[OpNode(i, "add", (4,)) for i in range(5)],
+                edges=[(i, i + 1) for i in range(4)])
+    x = node_feature_matrix(g)
+    assert x.shape == (5, 32)

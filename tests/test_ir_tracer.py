@@ -1,0 +1,113 @@
+"""IR + tracer: graph extraction invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import ShapeDtypeStruct as S
+
+from repro.core.ir import OP_VOCAB, OpGraph, OpNode, filter_and_preprocess
+from repro.core.tracer import trace_graph
+from repro.core.frontends import from_json
+
+
+def _mlp_graph(depth=2, width=32, batch=4):
+    def fn(params, x):
+        for w, b in params:
+            x = jnp.maximum(x @ w + b, 0.0)
+        return x
+    params = [(S((width, width), jnp.float32), S((width,), jnp.float32))
+              for _ in range(depth)]
+    return trace_graph(fn, params, S((batch, width), jnp.float32),
+                       meta={"batch": batch})
+
+
+def test_trace_is_dag_with_dense_ids():
+    g = _mlp_graph()
+    assert g.num_nodes == 6  # (dense, add, relu) x2
+    ids = [nd.node_id for nd in g.nodes]
+    assert ids == list(range(g.num_nodes))
+    g.topo_order()  # raises on cycle
+
+
+def test_ops_are_canonical():
+    g = _mlp_graph()
+    for nd in g.nodes:
+        assert nd.op in OP_VOCAB
+
+
+def test_macs_exact():
+    g = _mlp_graph(depth=3, width=16, batch=8)
+    assert g.total_macs() == pytest.approx(3 * 8 * 16 * 16)
+
+
+def test_param_bytes_attributed():
+    g = _mlp_graph()
+    dense_nodes = [nd for nd in g.nodes if nd.op == "dense"]
+    for nd in dense_nodes:
+        assert nd.param_bytes == 32 * 32 * 4
+
+
+def test_scan_replication_preserves_totals():
+    def fn(params, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        y, _ = jax.lax.scan(body, x, params)
+        return y
+    full = trace_graph(fn, S((10, 8, 8), jnp.float32),
+                       S((2, 8), jnp.float32))
+    capped = trace_graph(fn, S((10, 8, 8), jnp.float32),
+                         S((2, 8), jnp.float32), max_scan_iters=2)
+    assert full.total_macs() == pytest.approx(capped.total_macs())
+    assert capped.num_nodes < full.num_nodes
+
+
+def test_layout_ops_filtered():
+    def fn(params, x):
+        y = x.reshape(2, -1).T.reshape(x.shape)
+        return y @ params
+    g = trace_graph(fn, S((8, 8), jnp.float32), S((8, 8), jnp.float32))
+    assert all(nd.op in OP_VOCAB for nd in g.nodes)
+    assert g.op_count("dense") == 1
+
+
+def test_json_roundtrip():
+    g = _mlp_graph()
+    g2 = OpGraph.loads(g.dumps())
+    assert g2.num_nodes == g.num_nodes
+    assert g2.edges == g.edges
+    assert g2.fingerprint() == g.fingerprint()
+
+
+def test_foreign_json_frontend_aliases():
+    doc = {
+        "nodes": [
+            {"id": 0, "op": "Conv2D", "out_shape": [1, 8, 8, 16]},
+            {"id": 1, "op": "ReLU", "out_shape": [1, 8, 8, 16]},
+            {"id": 2, "op": "GEMM", "out_shape": [1, 10]},
+        ],
+        "edges": [[0, 1], [1, 2]],
+        "meta": {"batch": 1},
+    }
+    g = from_json(doc)
+    assert [nd.op for nd in g.nodes] == ["conv", "relu", "dense"]
+    assert g.edges == [(0, 1), (1, 2)]
+
+
+@given(st.integers(1, 4), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_fingerprint_depends_on_structure(depth, scale):
+    g1 = _mlp_graph(depth=depth, width=8 * scale)
+    g2 = _mlp_graph(depth=depth, width=8 * scale)
+    assert g1.fingerprint() == g2.fingerprint()
+
+
+def test_filter_contracts_connectivity():
+    nodes = [
+        OpNode(0, "dense", (4, 4)),
+        OpNode(1, "reshape", (16,)),      # layout — must vanish
+        OpNode(2, "relu", (16,)),
+    ]
+    g = filter_and_preprocess(nodes, [(0, 1), (1, 2)])
+    assert g.num_nodes == 2
+    assert (0, 1) in g.edges  # dense → relu wired through the reshape

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sage_spmm import sage_aggregate_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# sage_spmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f,density", [(33, 17, 0.1), (128, 32, 0.05),
+                                         (200, 33, 0.2), (64, 64, 0.0)])
+def test_sage_matches_ref(n, f, density):
+    adj = (RNG.random((2, n, n)) < density).astype(np.float32)
+    h = RNG.standard_normal((2, n, f)).astype(np.float32)
+    out = sage_aggregate_pallas(jnp.asarray(adj), jnp.asarray(h))
+    exp = ref.sage_aggregate_ref(jnp.asarray(adj), jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sage_isolated_nodes_zero():
+    adj = np.zeros((1, 16, 16), np.float32)
+    h = RNG.standard_normal((1, 16, 8)).astype(np.float32)
+    out = sage_aggregate_pallas(jnp.asarray(adj), jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,causal,window,qoff,dtype", [
+    (128, 128, True, 0, 0, np.float32),
+    (96, 96, False, 0, 0, np.float32),
+    (128, 128, True, 32, 0, np.float32),
+    (1, 256, False, 0, 255, np.float32),      # decode
+    (128, 128, True, 0, 0, jnp.bfloat16),
+])
+def test_flash_matches_ref(sq, skv, causal, window, qoff, dtype):
+    q = jnp.asarray(RNG.standard_normal((1, 2, sq, 64)), dtype)
+    k = jnp.asarray(RNG.standard_normal((1, 2, skv, 64)), dtype)
+    v = jnp.asarray(RNG.standard_normal((1, 2, skv, 64)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=qoff, bq=64, bk=64)
+    exp = ref.attention_ref(q, k, v, causal=causal, window=window,
+                            q_offset=qoff)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_nonaligned_head_dim():
+    # head_dim 80 (hubert/zamba) exercises the pad-to-128 path
+    q = jnp.asarray(RNG.standard_normal((1, 2, 64, 80)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 64, 80)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 64, 80)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, bq=32, bk=32)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [
+    (128, 2, 16, 8, 32), (96, 1, 8, 4, 32), (256, 2, 32, 16, 64)])
+def test_ssd_matches_sequential_ref(s, h, p, n, chunk):
+    x = jnp.asarray(RNG.standard_normal((2, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.random((2, s, h)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-(RNG.random(h) * 0.5 + 0.1), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((2, s, h, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((2, s, h, n)) * 0.3, jnp.float32)
+    y = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk)
+    y_ref = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_ssd_decode_continues_scan():
+    """prefill-then-decode == full scan (state handoff correctness)."""
+    Bt, S, H, P, N = 1, 64, 2, 8, 4
+    x = jnp.asarray(RNG.standard_normal((Bt, S, H, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.random((Bt, S, H)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-(RNG.random(H) * 0.5 + 0.1), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bt, S, H, N)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bt, S, H, N)) * 0.3, jnp.float32)
+    y_full = ref.ssd_scan_ref(x, dt, A, B, C)
+    # run first 48 steps, then decode the last 16 one at a time
+    y_pre = ref.ssd_scan_ref(x[:, :48], dt[:, :48], A, B[:, :48], C[:, :48])
+    state = jnp.zeros((Bt, H, N, P), jnp.float32)
+    for t in range(48):
+        _, state = ref.ssd_decode_ref(state, x[:, t], dt[:, t], A,
+                                      B[:, t], C[:, t])
+    ys = []
+    for t in range(48, 64):
+        y_t, state = ref.ssd_decode_ref(state, x[:, t], dt[:, t], A,
+                                        B[:, t], C[:, t])
+        ys.append(y_t)
+    y_dec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec),
+                               np.asarray(y_full[:, 48:]),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,98 @@
+"""MIG predictor (eq. 2) + TPU-slice advisor + analytic cost model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import ShapeDtypeStruct as S
+import jax.numpy as jnp
+
+from repro.core.mig import (MIG_PROFILES, predict_mig, predict_pods,
+                            predict_tpu_slice, mig_utilization)
+from repro.core.tracer import trace_graph
+from repro.perfmodel.cost_model import estimate
+from repro.perfmodel.devices import A100, TPU_V5E
+
+
+# ---- eq. 2 exactly --------------------------------------------------------
+
+@pytest.mark.parametrize("mb,expect", [
+    (1000.0, "1g.5gb"), (5 * 1024.0 - 1, "1g.5gb"),
+    (6000.0, "2g.10gb"), (15000.0, "3g.20gb"),
+    (25000.0, "7g.40gb"), (50 * 1024.0, None), (0.0, None),
+])
+def test_mig_bins(mb, expect):
+    assert predict_mig(mb) == expect
+
+
+@given(st.floats(1.0, 39 * 1024.0))
+@settings(max_examples=50, deadline=None)
+def test_mig_monotone_and_safe(mb):
+    prof = predict_mig(mb)
+    assert prof is not None
+    cap = dict(MIG_PROFILES)[prof]
+    assert mb < cap                      # predicted profile always fits
+
+
+@given(st.floats(1.0, 1e6))
+@settings(max_examples=50, deadline=None)
+def test_tpu_slice_fits_with_headroom(mb):
+    sl = predict_tpu_slice(mb)
+    if sl is not None:
+        chips = int(sl.split("-")[1])
+        assert mb < chips * 16 * 1024 * 0.9
+    else:
+        assert predict_pods(mb) >= 1
+
+
+def test_utilization_table_shape():
+    rows = mig_utilization(3272.0)       # densenet121 b8 from Table 5
+    assert rows[0][0] == "1g.5gb"
+    assert 0.5 < rows[0][1] < 0.7        # ≈58 % in the paper
+
+
+# ---- cost model properties --------------------------------------------------
+
+def _graph(width, depth=2, batch=4):
+    def fn(params, x):
+        for w in params:
+            x = jnp.maximum(x @ w, 0.0)
+        return x
+    params = [S((width, width), jnp.float32) for _ in range(depth)]
+    return trace_graph(fn, params, S((batch, width), jnp.float32),
+                       meta={"batch": batch})
+
+
+def test_more_compute_costs_more():
+    small = estimate(_graph(32), noise_sigma=0.0)
+    big = estimate(_graph(256), noise_sigma=0.0)
+    assert big.latency_ms > small.latency_ms
+    assert big.energy_j > small.energy_j
+    assert big.memory_mb > small.memory_mb
+
+
+def test_memory_includes_params_and_overhead():
+    g = _graph(64)
+    est = estimate(g, noise_sigma=0.0)
+    floor = (g.meta["param_bytes"] + A100.runtime_overhead_bytes) / 1e6
+    assert est.memory_mb >= floor
+
+
+def test_noise_is_deterministic():
+    g = _graph(64)
+    a = estimate(g, noise_sigma=0.02)
+    b = estimate(g, noise_sigma=0.02)
+    assert a.latency_ms == b.latency_ms
+
+
+def test_devices_differ():
+    g = _graph(128)
+    a = estimate(g, A100, noise_sigma=0.0)
+    t = estimate(g, TPU_V5E, noise_sigma=0.0)
+    assert a.latency_ms != t.latency_ms
+
+
+@given(st.integers(16, 128))
+@settings(max_examples=10, deadline=None)
+def test_latency_positive_finite(width):
+    est = estimate(_graph(width), noise_sigma=0.0)
+    assert est.latency_ms > 0 and np.isfinite(est.latency_ms)
+    assert est.utilization <= 1.0

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step
+on CPU, output shapes + no NaNs; decode↔forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config, get_smoke_config
+from repro.models import lm
+from repro.optim import adamw, constant
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=16):
+    inputs = {}
+    if cfg.frontend == "audio_frames":
+        inputs["features"] = jax.random.normal(KEY, (B, S, cfg.d_model))
+    else:
+        inputs["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.frontend == "tokens+vision":
+        inputs["vision_embeds"] = jax.random.normal(
+            KEY, (B, cfg.vision_tokens, cfg.vision_dim))
+    inputs["labels"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    return inputs
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_forward_and_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(KEY, cfg)
+    inputs = _inputs(cfg)
+    logits, _ = lm.forward(params, cfg, inputs)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    loss, metrics = lm.loss_fn(params, cfg, inputs)
+    assert bool(jnp.isfinite(loss))
+    opt = adamw(constant(1e-3))
+    opt_state = opt.init(params)
+    grads = jax.grad(lambda p: lm.loss_fn(p, cfg, inputs)[0])(params)
+    new_params, _ = opt.update(jnp.zeros((), jnp.int32), opt_state,
+                               params, grads)
+    loss2, _ = lm.loss_fn(new_params, cfg, inputs)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", [a for a in all_arch_names()
+                                  if get_config(a).causal
+                                  and get_config(a).moe is None])
+def test_decode_matches_forward(arch):
+    """One-shot decode from an empty cache == full forward (exact KV/state
+    semantics). MoE archs excluded: capacity dropping is batch-dependent."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 16
+    inputs = {k: v for k, v in _inputs(cfg, B, S).items() if k != "labels"}
+    logits_fwd, _ = lm.forward(params, cfg, inputs)
+    cache = lm.init_cache(cfg, B, 32)
+    if cfg.cross_attn_every:
+        _, full = lm.prefill(params, cfg, inputs, 32)
+        cache["cross_k"], cache["cross_v"] = full["cross_k"], full["cross_v"]
+    logits_dec, _ = lm.decode_step(params, cfg, cache, inputs,
+                                   jnp.asarray(0, jnp.int32))
+    # recurrent stacks (SSM state carried through a 50+ layer scan) pick
+    # up f32 accumulation-order drift between the two compiled graphs
+    tol = 2e-3 if cfg.block in ("mamba2", "hybrid") else 2e-4
+    np.testing.assert_allclose(np.asarray(logits_fwd),
+                               np.asarray(logits_dec), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "h2o-danube-3-4b",
+                                  "mamba2-370m", "zamba2-2.7b"])
+def test_incremental_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 12
+    inputs = {k: v for k, v in _inputs(cfg, B, S).items() if k != "labels"}
+    logits_fwd, _ = lm.forward(params, cfg, inputs)
+    cache = lm.init_cache(cfg, B, 32)
+    outs = []
+    for t in range(S):
+        step_in = {"tokens": inputs["tokens"][:, t:t + 1]}
+        lg, cache = lm.decode_step(params, cfg, cache, step_in,
+                                   jnp.asarray(t, jnp.int32))
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    tol = 2e-3 if cfg.block in ("mamba2", "hybrid") else 2e-4
+    np.testing.assert_allclose(np.asarray(logits_fwd), np.asarray(inc),
+                               atol=tol, rtol=tol)
+
+
+def test_param_count_matches_analytic():
+    """config.param_count() vs actual initialized tree — ±2 %."""
+    from repro import nn as rnn
+    for arch in ["qwen2.5-3b", "yi-34b", "mamba2-370m"]:
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(KEY, cfg)
+        actual = rnn.tree_size(params)
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.02, (
+            arch, actual, analytic)
+
+
+def test_full_configs_have_published_scale():
+    expected = {
+        "deepseek-v2-236b": 236e9, "grok-1-314b": 314e9,
+        "yi-34b": 34e9, "qwen2.5-3b": 3e9, "chatglm3-6b": 6e9,
+        "mamba2-370m": 370e6, "zamba2-2.7b": 2.7e9,
+        "h2o-danube-3-4b": 4e9, "llama-3.2-vision-11b": 10e9,
+        "hubert-xlarge": 1e9,
+    }
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < 1.45 * n, (arch, got, n)
+
+
+def test_moe_incremental_decode_close():
+    """MoE decode may differ slightly (capacity routing is batch-shape
+    dependent) but must stay close and finite."""
+    cfg = get_smoke_config("grok-1-314b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 8
+    inputs = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    logits_fwd, _ = lm.forward(params, cfg, inputs)
+    cache = lm.init_cache(cfg, B, 16)
+    logits_dec, _ = lm.decode_step(params, cfg, cache, inputs,
+                                   jnp.asarray(0, jnp.int32))
+    # with generous capacity nothing is dropped → exact
+    np.testing.assert_allclose(np.asarray(logits_fwd),
+                               np.asarray(logits_dec), atol=2e-4,
+                               rtol=2e-4)

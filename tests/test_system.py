@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system.
+
+DIPPM pipeline: model zoo → trace → label → dataset → train PMGNS →
+predict (latency, energy, memory) → MIG / TPU-slice recommendation.
+Small-scale but the full path — the CI twin of benchmarks/table4_gnn.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DIPPM, PMGNSConfig
+from repro.core.batching import batches_by_bucket, collate, sample_from_graph
+from repro.core.tracer import trace_graph
+from repro.dataset.builder import (build_dataset, load_dataset,
+                                   records_to_samples, save_dataset,
+                                   split_dataset)
+from repro.train.gnn_trainer import TrainConfig, evaluate, train_pmgns
+
+
+@pytest.fixture(scope="module")
+def tiny_dataset():
+    recs = build_dataset(n_graphs=36, seed=0, extra_families=("convnext",))
+    return recs
+
+
+def test_dataset_has_table2_families(tiny_dataset):
+    fams = {r.family for r in tiny_dataset}
+    assert {"efficientnet", "vgg", "resnet", "vit"} <= fams
+    assert "convnext" in fams
+
+
+def test_dataset_records_wellformed(tiny_dataset):
+    for r in tiny_dataset[:10]:
+        assert r.x.shape[1] == 32
+        assert r.y.shape == (3,)
+        assert (r.y > 0).all()
+        if len(r.edges):
+            assert r.edges.max() < r.n_nodes
+
+
+def test_dataset_persistence_roundtrip(tiny_dataset, tmp_path):
+    save_dataset(tiny_dataset[:8], str(tmp_path / "ds"))
+    back = load_dataset(str(tmp_path / "ds"))
+    assert len(back) == 8
+    np.testing.assert_allclose(back[0].y, tiny_dataset[0].y)
+    np.testing.assert_allclose(back[0].x, tiny_dataset[0].x)
+
+
+def test_split_is_partition_and_holds_out_convnext(tiny_dataset):
+    sp = split_dataset(tiny_dataset, seed=0)
+    n_main = len(sp["train"]) + len(sp["val"]) + len(sp["test"])
+    assert n_main + len(sp["unseen"]) == len(tiny_dataset)
+    assert all(r.family == "convnext" for r in sp["unseen"])
+    assert all(r.family != "convnext"
+               for r in sp["train"] + sp["val"] + sp["test"])
+
+
+def test_end_to_end_train_and_predict(tiny_dataset, tmp_path):
+    sp = split_dataset(tiny_dataset, seed=0)
+    train = records_to_samples(sp["train"])
+    val = records_to_samples(sp["val"] or sp["test"])
+    cfg = PMGNSConfig(hidden=48)
+    params, hist = train_pmgns(cfg, train, val,
+                               TrainConfig(epochs=3, batch_size=8,
+                                           lr=3e-3))
+    assert hist[-1]["train_loss"] < hist[0]["train_loss"]
+
+    metrics = evaluate(params, cfg, val)
+    assert np.isfinite(metrics["mape"])
+
+    # the Fig.5 usability surface
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as S
+    dippm = DIPPM.from_params(params, cfg)
+
+    def toy(params_, x):
+        return jnp.maximum(x @ params_, 0.0)
+
+    pred = dippm.predict_jax(toy, S((64, 64), jnp.float32),
+                             S((8, 64), jnp.float32), batch=8)
+    assert pred.latency_ms > 0 and pred.memory_mb > 0
+    assert pred.mig in (None, "1g.5gb", "2g.10gb", "3g.20gb", "7g.40gb")
+    assert pred.tpu_slice is None or pred.tpu_slice.startswith("v5e-")
+
+    # save/load the trained predictor
+    path = str(tmp_path / "dippm.pkl")
+    dippm.save(path)
+    back = DIPPM.load(path)
+    pred2 = back.predict_jax(toy, S((64, 64), jnp.float32),
+                             S((8, 64), jnp.float32), batch=8)
+    assert pred2.latency_ms == pytest.approx(pred.latency_ms, rel=1e-5)
+
+
+def test_batching_buckets_and_masks(tiny_dataset):
+    samples = records_to_samples(tiny_dataset)
+    for s in samples[:8]:
+        n = int(s.mask.sum())
+        assert s.x.shape[0] >= n
+        assert (s.x[int(s.mask.sum()):] == 0).all()
+    batches = batches_by_bucket(samples, batch_size=8)
+    total = sum(b["x"].shape[0] for b in batches)
+    assert total == len(samples)
+    for b in batches:
+        assert b["x"].shape[0] == b["adj"].shape[0] == b["y"].shape[0]
+        assert b["adj"].shape[1] == b["adj"].shape[2] == b["x"].shape[1]
