@@ -1,0 +1,99 @@
+"""Engine throughput: batched ``predict_many`` vs the per-graph loop.
+
+The predictor's own throughput is the product metric for design-space
+exploration (PerfSAGE / PerfSeer both report it): a zoo sweep scores
+hundreds of candidate graphs, so predictions/sec — not single-graph
+latency — decides how fast the search runs.
+
+Sweeps a 64-model zoo grid (4 families × 16 variants), times
+
+* **loop**   — ``[dippm.predict_graph(g) for g in graphs]`` (eager,
+  batch-of-1 per graph; the pre-engine baseline), and
+* **engine** — ``dippm.predict_many(graphs)`` (bucketed, batched, one
+  compiled apply per padded shape),
+
+and checks the two produce identical predictions (max |Δ| ≤ 1e-5 on
+latency/energy/memory). Tracing the 64 graphs is *not* timed — both
+paths consume the same pre-built ``OpGraph`` list.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput
+"""
+from __future__ import annotations
+
+from .common import timed, write_json
+
+
+def _sweep_graphs():
+    """64 zoo graphs: 4 families × (4 shape points × 4 batch sizes)."""
+    from repro.zoo.families import trace_family, variant_grid
+    grids = {
+        "mobilenet": variant_grid("mobilenet", {
+            "width": [0.35, 0.5, 0.75, 1.0], "batch": [1, 4, 16, 64],
+            "res": [128]}),
+        "mnasnet": variant_grid("mnasnet", {
+            "width": [0.35, 0.5, 0.75, 1.0], "batch": [1, 4, 16, 64],
+            "res": [128]}),
+        "resnet": variant_grid("resnet", {
+            "width": [0.5, 1.0], "bottleneck": [False, True],
+            "batch": [1, 4, 16, 64], "res": [128]}),
+        "vit": variant_grid("vit", {
+            "dim": [192, 384], "depth": [6, 12], "batch": [1, 4, 16, 64],
+            "res": [224], "patch": [32]}),
+    }
+    graphs = []
+    for fam, grid in grids.items():
+        graphs.extend(trace_family(fam, cfg) for cfg in grid)
+    return graphs
+
+
+def run(n_graphs: int = 64, hidden: int = 128, repeats: int = 3):
+    import jax
+    import numpy as np
+    from repro.core import DIPPM, PMGNSConfig, pmgns_init
+
+    graphs = _sweep_graphs()[:n_graphs]
+    cfg = PMGNSConfig(hidden=hidden)
+    dippm = DIPPM.from_params(pmgns_init(jax.random.PRNGKey(0), cfg), cfg)
+
+    loop_out, loop_s = timed(
+        lambda: [dippm.predict_graph(g) for g in graphs], repeats=repeats)
+    dippm.predict_many(graphs)          # warm the compiled-fn cache
+    st = dippm.engine().stats
+    compiles, batches0 = st.cache_misses, st.batches_run
+    many_out, many_s = timed(
+        lambda: dippm.predict_many(graphs), repeats=repeats)
+    batches_per_sweep = (st.batches_run - batches0) // repeats
+
+    diffs = [
+        max(abs(a.latency_ms - b.latency_ms), abs(a.energy_j - b.energy_j),
+            abs(a.memory_mb - b.memory_mb))
+        for a, b in zip(loop_out, many_out)
+    ]
+    res = {
+        "n_graphs": len(graphs),
+        "loop_pred_per_s": round(len(graphs) / loop_s, 2),
+        "engine_pred_per_s": round(len(graphs) / many_s, 2),
+        "speedup": round(loop_s / many_s, 2),
+        "max_abs_diff": float(np.max(diffs)),
+        "batches_per_sweep": batches_per_sweep,
+        "compiles": compiles,
+    }
+    res["artifact"] = write_json("engine_throughput.json", res)
+    return res
+
+
+def main():
+    res = run()
+    print(f"loop   : {res['loop_pred_per_s']:9.2f} predictions/s")
+    print(f"engine : {res['engine_pred_per_s']:9.2f} predictions/s "
+          f"({res['compiles']} compiles, {res['batches_per_sweep']} "
+          f"batched calls/sweep)")
+    print(f"speedup: {res['speedup']:.2f}x   "
+          f"max |diff| = {res['max_abs_diff']:.2e}")
+    ok = res["speedup"] >= 3.0 and res["max_abs_diff"] <= 1e-5
+    print("PASS" if ok else "FAIL", "(target: ≥3x, |diff| ≤ 1e-5)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

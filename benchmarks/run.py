@@ -24,11 +24,13 @@ def main() -> None:
     n_graphs = args.n_graphs or (1200 if args.full else 240)
     epochs = args.epochs or (60 if args.full else 25)
 
-    from . import (fig3_mig_memory, fig4_scatter, microbench,
-                   roofline_report, table2_dataset, table4_gnn, table5_mig)
+    from . import (engine_throughput, fig3_mig_memory, fig4_scatter,
+                   microbench, roofline_report, table2_dataset, table4_gnn,
+                   table5_mig)
 
     jobs = {
         "microbench": lambda: microbench.run(),
+        "engine": lambda: engine_throughput.run(),
         "table2": lambda: table2_dataset.run(n_graphs=n_graphs),
         "table4": lambda: table4_gnn.run(n_graphs=n_graphs, epochs=epochs),
         "table5": lambda: table5_mig.run(n_graphs=n_graphs,

@@ -1,23 +1,19 @@
 """Rapid design-space exploration with DIPPM (paper §1: "helps to perform
 rapid design-space exploration for the inference performance of a model").
 
-Sweeps a ViT family over (depth × width × batch), predicts latency /
-memory for every point WITHOUT running any of them, and prints the
-Pareto-optimal configurations under a memory budget.
+Sweeps a ViT family over (depth × width × batch) with the **batched
+prediction engine** (``DIPPM.predict_zoo``): all 27 candidates are traced,
+bucketed by padded size, and scored in a handful of jit-compiled batched
+apply calls — no candidate is ever executed. Prints the Pareto-optimal
+configurations under a memory budget plus engine throughput stats.
 
     PYTHONPATH=src python examples/design_space_exploration.py
 """
-import itertools
-
-import jax.numpy as jnp
-from jax import ShapeDtypeStruct as S
-
 from repro.core import DIPPM, PMGNSConfig
-from repro.core.frontends import from_jax
 from repro.dataset.builder import (build_dataset, records_to_samples,
                                    split_dataset)
 from repro.train.gnn_trainer import TrainConfig, train_pmgns
-from repro.zoo.families import build_family
+from repro.zoo.families import variant_grid
 
 
 def main():
@@ -31,16 +27,15 @@ def main():
     dippm = DIPPM.from_params(params, cfg)
 
     budget_mb = 5 * 1024.0       # must fit a 1g.5gb MIG instance
-    points = []
-    for depth, dim, batch in itertools.product(
-            [6, 8, 12], [192, 384, 768], [1, 8, 32]):
-        specs, fwd, meta = build_family(
-            "vit", {"depth": depth, "dim": dim, "batch": batch,
-                    "res": 224})
-        pred = dippm.predict_jax(
-            fwd, specs, S((batch, 224, 224, 3), jnp.float32),
-            batch=batch, meta=meta)
-        points.append(((depth, dim, batch), pred))
+    grid = variant_grid("vit", {"depth": [6, 8, 12],
+                                "dim": [192, 384, 768],
+                                "batch": [1, 8, 32],
+                                "res": [224]})
+    points = [((c["depth"], c["dim"], c["batch"]), p)
+              for c, p in dippm.predict_zoo("vit", grid)]
+    st = dippm.engine().stats
+    print(f"engine: {st.graphs_predicted} graphs in {st.batches_run} "
+          f"batched calls ({st.cache_misses} compiles)\n")
 
     feasible = [(k, p) for k, p in points if p.memory_mb < budget_mb]
     # pareto: lowest latency per (depth·dim) capacity proxy

@@ -5,9 +5,15 @@ from .frontends import from_jax, from_json, from_json_file
 from .node_features import (NODE_FEATURE_DIM, node_feature_matrix,
                             adjacency_matrix, graph_tensors)
 from .static_features import STATIC_FEATURE_DIM, static_features
-from .batching import GraphSample, collate, batches_by_bucket, sample_from_graph
-from .gnn import (PMGNSConfig, pmgns_init, pmgns_apply, encode_targets,
-                  decode_targets, huber, mape, TARGET_NAMES)
+from .batching import (GraphSample, collate, batches_by_bucket,
+                       sample_from_graph, group_by_bucket,
+                       max_batch_for_bucket, next_pow2, bucket_for,
+                       DEFAULT_BUCKETS)
+from .gnn import (PMGNSConfig, pmgns_init, pmgns_apply, pmgns_infer,
+                  make_infer_fn, encode_targets, decode_targets, huber,
+                  mape, TARGET_NAMES)
 from .mig import (predict_mig, predict_tpu_slice, predict_pods,
                   MIG_PROFILES, TPU_V5E_SLICES, mig_utilization)
-from .predictor import DIPPM, Prediction
+from .predictor import DIPPM, Prediction, make_prediction
+from .engine import (EngineConfig, EngineStats, PredictionEngine,
+                     INFERENCE_BUCKETS)

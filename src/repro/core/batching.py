@@ -40,10 +40,43 @@ class GraphSample:
 
 
 def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket that fits ``n`` nodes (largest bucket if none do)."""
     for b in buckets:
         if n <= b:
             return b
     return buckets[-1]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (≥ 1) — the batch-dimension buckets."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def max_batch_for_bucket(size: int, batch_size: int,
+                         ref_size: int = 256) -> int:
+    """Per-bucket batch cap under a constant memory envelope.
+
+    The padded ``[B, N, N]`` adjacency dominates batch memory, so the cap
+    scales ``batch_size`` down for buckets larger than ``ref_size`` such
+    that ``B · N²`` stays within ``batch_size · ref_size²`` cells.
+    """
+    base_cells = batch_size * ref_size * ref_size
+    return max(1, min(batch_size, base_cells // (size * size)))
+
+
+def group_by_bucket(
+    samples: Sequence[GraphSample],
+) -> Dict[int, List[int]]:
+    """Group sample *indices* by padded bucket size, preserving input order.
+
+    Shared by training batching (:func:`batches_by_bucket`) and the
+    inference engine (``repro.core.engine``), which needs the indices to
+    restore input order after per-bucket batched execution.
+    """
+    by_bucket: Dict[int, List[int]] = {}
+    for i, s in enumerate(samples):
+        by_bucket.setdefault(s.x.shape[0], []).append(i)
+    return by_bucket
 
 
 def sample_from_graph(
@@ -71,12 +104,15 @@ def sample_from_graph(
     size = bucket_for(n, buckets)
 
     adj = np.zeros((size, size), dtype=np.float32)
-    for s, d in g.edges:
-        if keep is not None:
+    if keep is None:
+        if g.edges:
+            e = np.asarray(g.edges, dtype=np.int64).reshape(-1, 2)
+            adj[e[:, 1], e[:, 0]] = 1.0
+    else:
+        for s, d in g.edges:
             if s not in remap or d not in remap:
                 continue
-            s, d = remap[s], remap[d]
-        adj[d, s] = 1.0
+            adj[remap[d], remap[s]] = 1.0
 
     xp = np.zeros((size, x.shape[1]), dtype=np.float32)
     xp[:n] = x
@@ -117,18 +153,14 @@ def batches_by_bucket(
     Per-bucket batch size is scaled down for big buckets so the padded
     [B, N, N] adjacency stays within a constant memory envelope.
     """
-    by_bucket: Dict[int, List[GraphSample]] = {}
-    for s in samples:
-        by_bucket.setdefault(s.x.shape[0], []).append(s)
     out: List[Dict[str, np.ndarray]] = []
-    base_cells = batch_size * 256 * 256
-    for size, group in sorted(by_bucket.items()):
-        bs = max(1, min(batch_size, base_cells // (size * size)))
-        idx = np.arange(len(group))
+    for size, members in sorted(group_by_bucket(samples).items()):
+        bs = max_batch_for_bucket(size, batch_size)
+        idx = np.arange(len(members))
         if rng is not None:
             rng.shuffle(idx)
-        for i in range(0, len(group), bs):
-            chunk = [group[j] for j in idx[i:i + bs]]
+        for i in range(0, len(members), bs):
+            chunk = [samples[members[j]] for j in idx[i:i + bs]]
             if drop_remainder and len(chunk) < bs:
                 continue
             out.append(collate(chunk))

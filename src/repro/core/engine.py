@@ -1,0 +1,200 @@
+"""Batched multi-graph prediction engine — DIPPM as a sweep engine.
+
+``DIPPM.predict_graph`` pads and runs one graph at a time: every call pays
+a fresh un-jitted ``pmgns_apply`` trace plus a batch-of-1 matmul that
+leaves the MXU idle. Design-space exploration (the paper's §1 use case —
+scoring thousands of candidate models) wants the opposite: amortize
+compilation across the whole sweep and fill the batch dimension.
+
+:class:`PredictionEngine` does both:
+
+1. **Bucket** — each :class:`~repro.core.batching.GraphSample` is padded to
+   a node bucket (``repro.core.batching.DEFAULT_BUCKETS``); samples are
+   grouped per bucket via :func:`~repro.core.batching.group_by_bucket`.
+2. **Batch** — within a bucket, samples are chunked under a constant
+   memory envelope (:func:`~repro.core.batching.max_batch_for_bucket`) and
+   the chunk is padded along the batch dimension to a power of two.
+3. **Compile once per shape** — a jitted apply+decode function
+   (:func:`~repro.core.gnn.make_infer_fn`) is cached per
+   ``(node_bucket, batch_bucket)``; a sweep of 10k graphs compiles a
+   handful of functions, then streams.
+4. **Restore order** — results are scattered back to input positions, so
+   ``engine.predict_graphs(gs)[i]`` always corresponds to ``gs[i]``.
+
+Typical use goes through :meth:`repro.core.predictor.DIPPM.predict_many`;
+instantiate the engine directly only to tune buckets / batch caps or to
+pre-compile with :meth:`PredictionEngine.warmup`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batching import (DEFAULT_BUCKETS, GraphSample, group_by_bucket,
+                       max_batch_for_bucket, next_pow2, sample_from_graph)
+from .gnn import PMGNSConfig, make_infer_fn
+from .ir import OpGraph
+from .static_features import STATIC_FEATURE_DIM, STATIC_FEATURE_DIM_EXT
+
+
+#: Optional finer node buckets for throughput-critical sweeps. Padded
+#: adjacency compute is quadratic in the bucket size, so extra compiled
+#: shapes buy a large cut in padded FLOPs (an 815-node graph pads to 896
+#: instead of 1024: 1.3× less matmul work). Masked layers make padding
+#: numerically inert, but different padded shapes change XLA reduction
+#: order, so predictions can drift ~1e-4 from the per-graph path — hence
+#: not the default. Use via ``DIPPM.engine(buckets=INFERENCE_BUCKETS)``.
+INFERENCE_BUCKETS: Tuple[int, ...] = (
+    32, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512, 640, 768,
+    896, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for the batched prediction engine.
+
+    ``buckets`` defaults to the training buckets so engine predictions
+    match ``predict_graph`` bit-for-bit; ``max_batch`` bounds graphs per
+    compiled call at the reference node bucket (256), and larger buckets
+    get proportionally smaller caps so the padded ``[B, N, N]`` adjacency
+    stays inside one memory envelope.
+    """
+
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    max_batch: int = 64
+    extended_static: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters exposed as :attr:`PredictionEngine.stats`."""
+
+    graphs_predicted: int = 0
+    batches_run: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+
+class PredictionEngine:
+    """Order-preserving batched inference over many ``OpGraph``s.
+
+    Holds trained PMGNS ``params`` + ``cfg`` and a compiled-function cache
+    keyed on ``(node_bucket, batch_bucket)``. Thread-compatible for reads
+    after :meth:`warmup`; compilation itself is single-threaded.
+    """
+
+    def __init__(self, params, cfg: PMGNSConfig,
+                 engine_cfg: EngineConfig = EngineConfig()):
+        feat_dim = (STATIC_FEATURE_DIM_EXT if engine_cfg.extended_static
+                    else STATIC_FEATURE_DIM)
+        if cfg.static_dim != feat_dim:
+            raise ValueError(
+                f"extended_static={engine_cfg.extended_static} produces "
+                f"{feat_dim}-dim static features but the model was built "
+                f"with PMGNSConfig(static_dim={cfg.static_dim})")
+        self.params = params
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.stats = EngineStats()
+        # One jitted closure serves every shape (jax.jit caches one
+        # executable per input shape); the key set tracks which
+        # (node_bucket, batch_bucket) shapes have compiled, for stats.
+        self._infer = make_infer_fn(cfg)
+        self._compiled_shapes: set = set()
+
+    # -- compiled-fn cache ---------------------------------------------------
+    def _infer_fn(self, node_bucket: int, batch_bucket: int):
+        key = (node_bucket, batch_bucket)
+        if key in self._compiled_shapes:
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+            self._compiled_shapes.add(key)
+        return self._infer
+
+    def warmup(self, node_buckets: Optional[Sequence[int]] = None,
+               batch_buckets: Optional[Sequence[int]] = None) -> int:
+        """Pre-compile for the given shape grid (serving cold-start).
+
+        Defaults to every node bucket × the full per-bucket batch cap.
+        Returns the number of functions compiled.
+        """
+        import jax.numpy as jnp
+        node_buckets = tuple(node_buckets or self.engine_cfg.buckets)
+        before = self.stats.cache_misses
+        sdim = self.cfg.static_dim
+        for n in node_buckets:
+            bbs = batch_buckets or (self._batch_cap(n),)
+            for b in bbs:
+                b = next_pow2(int(b))       # predict pads to powers of two
+                fn = self._infer_fn(n, b)
+                batch = {
+                    "x": jnp.zeros((b, n, self.cfg.node_feat_dim)),
+                    "adj": jnp.zeros((b, n, n)),
+                    "mask": jnp.zeros((b, n)),
+                    "static": jnp.zeros((b, sdim)),
+                }
+                fn(self.params, batch).block_until_ready()
+        return self.stats.cache_misses - before
+
+    def _batch_cap(self, node_bucket: int) -> int:
+        """Chunk-size cap for a bucket: the memory-envelope cap rounded
+        *down* to a power of two, so padded chunks never exceed the
+        envelope and full chunks hit one compiled shape."""
+        cap = max_batch_for_bucket(node_bucket, self.engine_cfg.max_batch)
+        return 1 << (cap.bit_length() - 1)
+
+    # -- core batched run ----------------------------------------------------
+    def _run_chunk(self, node_bucket: int,
+                   chunk: Sequence[GraphSample]) -> np.ndarray:
+        """Run one same-bucket chunk; returns ``[len(chunk), n_targets]``."""
+        import jax.numpy as jnp
+        b = len(chunk)
+        bb = next_pow2(b)
+        feat = chunk[0].x.shape[1]
+        sdim = chunk[0].static.shape[0]
+        x = np.zeros((bb, node_bucket, feat), dtype=np.float32)
+        adj = np.zeros((bb, node_bucket, node_bucket), dtype=np.float32)
+        mask = np.zeros((bb, node_bucket), dtype=np.float32)
+        static = np.zeros((bb, sdim), dtype=np.float32)
+        for i, s in enumerate(chunk):
+            x[i], adj[i], mask[i], static[i] = s.x, s.adj, s.mask, s.static
+        fn = self._infer_fn(node_bucket, bb)
+        batch = {"x": jnp.asarray(x), "adj": jnp.asarray(adj),
+                 "mask": jnp.asarray(mask), "static": jnp.asarray(static)}
+        out = np.asarray(fn(self.params, batch))
+        self.stats.batches_run += 1
+        return out[:b]
+
+    def predict_samples(self, samples: Sequence[GraphSample]) -> np.ndarray:
+        """Predict targets for padded samples, in input order.
+
+        Returns ``[len(samples), n_targets]`` physical-unit predictions
+        (latency ms, energy J, memory MB).
+        """
+        samples = list(samples)
+        out = np.zeros((len(samples), self.cfg.n_targets), dtype=np.float32)
+        if not samples:
+            return out
+        for size, members in sorted(group_by_bucket(samples).items()):
+            cap = self._batch_cap(size)
+            for i in range(0, len(members), cap):
+                idx = members[i:i + cap]
+                out[idx] = self._run_chunk(size, [samples[j] for j in idx])
+        self.stats.graphs_predicted += len(samples)
+        return out
+
+    def predict_graphs(self, graphs: Sequence[OpGraph]) -> List["Prediction"]:
+        """Pad, bucket, and predict many graphs; one ``Prediction`` each,
+        in input order."""
+        from .predictor import Prediction, make_prediction
+        samples = [
+            sample_from_graph(g, buckets=self.engine_cfg.buckets,
+                              extended_static=self.engine_cfg.extended_static)
+            for g in graphs
+        ]
+        ys = self.predict_samples(samples)
+        return [make_prediction(y, meta=dict(g.meta))
+                for g, y in zip(graphs, ys)]

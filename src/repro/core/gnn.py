@@ -222,6 +222,31 @@ def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
     return y
 
 
+def pmgns_infer(p: Params, cfg: PMGNSConfig,
+                batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Batched inference: padded batch → ``[B, n_targets]`` physical units.
+
+    Fuses the forward pass with the ``log1p``-space decode so the whole
+    prediction (apply + decode) is one jittable function — this is the
+    unit the prediction engine (``repro.core.engine``) compiles per
+    ``(node_bucket, batch_bucket)`` shape.
+    """
+    return decode_targets(pmgns_apply(p, cfg, batch, train=False))
+
+
+def make_infer_fn(cfg: PMGNSConfig):
+    """Jitted ``(params, batch) → [B, n_targets]`` closure over ``cfg``.
+
+    Each distinct padded batch shape triggers exactly one compilation;
+    callers that bucket shapes (the engine) therefore pay a bounded
+    number of compiles for an unbounded stream of graphs.
+    """
+    @jax.jit
+    def infer(p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return pmgns_infer(p, cfg, batch)
+    return infer
+
+
 # ---------------------------------------------------------------------------
 # target transforms & metrics
 # ---------------------------------------------------------------------------

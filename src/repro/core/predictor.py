@@ -9,12 +9,18 @@ Frontends: any JAX callable (``predict_jax``), a serialized portable graph
 (``predict_json``), or a pre-built OpGraph (``predict_graph``). The MIG
 profile (eq. 2) and the TPU-slice recommendation are derived from the
 predicted memory exactly as §3.5 prescribes.
+
+For sweeps, ``predict_many`` routes whole graph lists through the batched
+prediction engine (``repro.core.engine``) — same results as a
+``predict_graph`` loop, one jit-compiled batched apply per padded shape —
+and ``predict_zoo`` runs a model-family grid end to end (build → trace →
+predict) without executing any of the candidate models.
 """
 from __future__ import annotations
 
 import dataclasses
 import pickle
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,6 +33,13 @@ from .mig import predict_mig, predict_pods, predict_tpu_slice
 
 @dataclasses.dataclass
 class Prediction:
+    """One model's predicted inference profile + resource advice.
+
+    ``latency_ms`` / ``energy_j`` / ``memory_mb`` are the PMGNS regression
+    targets in physical units; ``mig`` / ``tpu_slice`` / ``pods`` are the
+    §3.5 resource recommendations derived from the predicted memory.
+    """
+
     latency_ms: float
     energy_j: float
     memory_mb: float
@@ -42,25 +55,43 @@ class Prediction:
                 f"tpu_slice={self.tpu_slice}, pods={self.pods})")
 
 
+def make_prediction(y: np.ndarray,
+                    meta: Optional[Dict[str, Any]] = None) -> Prediction:
+    """Wrap decoded targets ``[latency_ms, energy_j, memory_mb]`` into a
+    :class:`Prediction` with the §3.5 MIG / TPU-slice advice attached."""
+    lat, enr, mem = [float(v) for v in np.asarray(y).reshape(-1)[:3]]
+    return Prediction(
+        latency_ms=lat, energy_j=enr, memory_mb=mem,
+        mig=predict_mig(mem),
+        tpu_slice=predict_tpu_slice(mem),
+        pods=predict_pods(mem),
+        meta=dict(meta or {}),
+    )
+
+
 class DIPPM:
     """Trained predictor + frontends + resource advisors."""
 
     def __init__(self, params, cfg: PMGNSConfig):
         self.params = params
         self.cfg = cfg
+        self._engine = None
 
     # -- constructors -------------------------------------------------------
     @classmethod
     def from_params(cls, params, cfg: PMGNSConfig) -> "DIPPM":
+        """Wrap already-trained PMGNS parameters."""
         return cls(params, cfg)
 
     @classmethod
     def load(cls, path: str) -> "DIPPM":
+        """Load a predictor saved with :meth:`save`."""
         with open(path, "rb") as f:
             blob = pickle.load(f)
         return cls(blob["params"], blob["cfg"])
 
     def save(self, path: str) -> None:
+        """Pickle params + config (host arrays) to ``path``."""
         import jax
         params = jax.tree_util.tree_map(np.asarray, self.params)
         with open(path, "wb") as f:
@@ -68,23 +99,19 @@ class DIPPM:
 
     # -- prediction ----------------------------------------------------------
     def predict_graph(self, g: OpGraph) -> Prediction:
+        """Predict one pre-built :class:`OpGraph` (single-shot path)."""
         import jax.numpy as jnp
         sample = sample_from_graph(g)
         batch = collate([sample])
         jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "y"}
         pred = pmgns_apply(self.params, self.cfg, jb, train=False)
-        lat, enr, mem = [float(x) for x in np.asarray(decode_targets(pred))[0]]
-        return Prediction(
-            latency_ms=lat, energy_j=enr, memory_mb=mem,
-            mig=predict_mig(mem),
-            tpu_slice=predict_tpu_slice(mem),
-            pods=predict_pods(mem),
-            meta=dict(g.meta),
-        )
+        return make_prediction(np.asarray(decode_targets(pred))[0],
+                               meta=dict(g.meta))
 
     def predict_jax(self, forward, param_specs, *input_specs,
                     batch: Optional[int] = None,
                     meta: Optional[Dict[str, Any]] = None) -> Prediction:
+        """Trace a JAX callable abstractly and predict it — Fig. 5 flow."""
         m = dict(meta or {})
         if batch is not None:
             m.setdefault("batch", batch)
@@ -92,4 +119,51 @@ class DIPPM:
         return self.predict_graph(g)
 
     def predict_json(self, doc: Dict[str, Any]) -> Prediction:
+        """Predict a portable serialized graph (``repro.opgraph.v1``)."""
         return self.predict_graph(from_json(doc))
+
+    # -- batched sweeps ------------------------------------------------------
+    def engine(self, **overrides) -> "PredictionEngine":
+        """The batched prediction engine for this predictor.
+
+        With no arguments, returns the cached default-config engine that
+        ``predict_many`` / ``predict_zoo`` use. Keyword overrides are
+        :class:`repro.core.engine.EngineConfig` fields (``buckets``,
+        ``max_batch``, ``extended_static``) and return a **fresh**,
+        un-cached engine — the default engine (and its compiled-function
+        cache and stats) is left untouched, so sweeps through
+        ``predict_many`` keep their bit-for-bit equivalence with
+        ``predict_graph`` regardless of custom engines in flight.
+        """
+        from .engine import EngineConfig, PredictionEngine
+        if overrides:
+            return PredictionEngine(self.params, self.cfg,
+                                    EngineConfig(**overrides))
+        if self._engine is None:
+            self._engine = PredictionEngine(self.params, self.cfg,
+                                            EngineConfig())
+        return self._engine
+
+    def predict_many(self, graphs: Sequence[OpGraph]) -> List[Prediction]:
+        """Predict many graphs at once, preserving input order.
+
+        Equivalent to ``[self.predict_graph(g) for g in graphs]`` but
+        bucketed + batched: one compiled apply per padded shape instead of
+        one eager apply per graph. This is the entry point for zoo sweeps.
+        """
+        return self.engine().predict_graphs(graphs)
+
+    def predict_zoo(self, family: str,
+                    grid: Iterable[Dict[str, Any]],
+                    ) -> List[Tuple[Dict[str, Any], Prediction]]:
+        """Sweep a zoo family over a config grid without running any model.
+
+        ``grid`` is an iterable of variant configs for
+        ``repro.zoo.families.build_family`` (see
+        ``repro.zoo.families.variant_grid`` for the cartesian-product
+        helper). Returns ``(cfg, Prediction)`` pairs in grid order.
+        """
+        from ..zoo.families import trace_family
+        cfgs = list(grid)
+        graphs = [trace_family(family, cfg) for cfg in cfgs]
+        return list(zip(cfgs, self.predict_many(graphs)))

@@ -27,10 +27,9 @@ import numpy as np
 from ..core.batching import DEFAULT_BUCKETS, GraphSample, bucket_for
 from ..core.node_features import NODE_FEATURE_DIM, node_feature_matrix
 from ..core.static_features import static_features
-from ..core.tracer import trace_graph
 from ..perfmodel.cost_model import estimate
 from ..perfmodel.devices import DEVICES
-from ..zoo.families import TABLE2_FRACTIONS, build_family, family_variants
+from ..zoo.families import TABLE2_FRACTIONS, family_variants, trace_family
 
 DATASET_VERSION = "dippm-ds-v1"
 
@@ -48,12 +47,7 @@ class DatasetRecord:
 
 def _trace_and_label(family: str, cfg: Dict, device_name: str,
                      noise_sigma: float) -> DatasetRecord:
-    import jax.numpy as jnp
-    from jax import ShapeDtypeStruct as S
-
-    specs, fwd, meta = build_family(family, cfg)
-    x_spec = S((cfg["batch"], cfg["res"], cfg["res"], 3), jnp.float32)
-    g = trace_graph(fwd, specs, x_spec, meta=meta)
+    g = trace_family(family, cfg)
     est = estimate(g, DEVICES[device_name], noise_sigma=noise_sigma)
     return DatasetRecord(
         x=node_feature_matrix(g),

@@ -32,12 +32,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from .. import nn
+from .. import compat, nn
 from .config import ArchConfig
 from .parallel import ParallelCtx
 from . import layers as L
 
 Params = Dict[str, Any]
+
+_shard_map = compat.shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -70,7 +72,7 @@ def _ffn_apply(p, cfg: ArchConfig, x, ctx: ParallelCtx):
             y2, aux = L.moe_apply_local(p, cfg, x2)
             return y2.reshape(B, S, D), aux
         if ctx.moe_impl == "ep" and ctx.mesh is not None:
-            shard_map = jax.shard_map
+            shard_map = _shard_map
             mo = cfg.moe
             tp = ctx.mesh.shape[ctx.model_axis]
             all_axes = tuple(ctx.data_axes) + (ctx.model_axis,)
@@ -97,7 +99,7 @@ def _ffn_apply(p, cfg: ArchConfig, x, ctx: ParallelCtx):
                 out_specs=(tok_spec, P()),
                 check_vma=False)(p, x2)
         elif ctx.moe_impl == "tp" and ctx.mesh is not None:
-            shard_map = jax.shard_map
+            shard_map = _shard_map
             mo = cfg.moe
             all_axes = tuple(ctx.data_axes) + (ctx.model_axis,)
             tok_spec = P(all_axes, None)
@@ -292,7 +294,7 @@ def _embed(p, cfg: ArchConfig, inputs: Dict[str, jnp.ndarray],
 
         out_seq = P(bspec, ctx.model_axis, None) if seq_ok \
             else P(bspec, None, None)
-        x = jax.shard_map(
+        x = _shard_map(
             lookup, mesh=ctx.mesh,
             in_specs=(P(ctx.model_axis, None), P(bspec, None)),
             out_specs=out_seq,

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import compat
+
 
 def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """→ (int8 values, f32 per-row scales). Works on any ndim ≥ 1."""
@@ -69,7 +71,7 @@ def compressed_grad_allreduce(
             return (summed / n).astype(g_blk.dtype), new_err
 
         spec_g = jax.sharding.PartitionSpec(*([None] * g.ndim))
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(spec_g, spec_g), out_specs=(spec_g, spec_g),
             check_vma=False)

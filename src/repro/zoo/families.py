@@ -14,7 +14,8 @@ graph with shapes/attributes, not trained weights.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Tuple
+import itertools
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -681,3 +682,37 @@ def build_family(family: str, cfg: Dict[str, Any]):
     specs, fwd, meta = FAMILIES[family](cfg)
     meta.update({k: v for k, v in cfg.items() if k not in meta})
     return specs, fwd, meta
+
+
+def trace_family(family: str, cfg: Dict[str, Any]):
+    """Build one family variant and trace it into an ``OpGraph``.
+
+    The standard image input spec ``[batch, res, res, 3]`` is derived from
+    ``cfg`` (defaults: batch 1, res 224). This is the zoo→predictor glue
+    used by the dataset builder and ``DIPPM.predict_zoo``.
+    """
+    from ..core.frontends import from_jax
+    specs, fwd, meta = build_family(family, cfg)
+    batch = int(cfg.get("batch", 1))
+    res = int(cfg.get("res", 224))
+    return from_jax(fwd, specs, S((batch, res, res, 3), F32), meta=meta)
+
+
+def variant_grid(family: str,
+                 axes: Dict[str, Sequence[Any]]) -> List[Dict[str, Any]]:
+    """Cartesian product of config axes → list of variant configs.
+
+        variant_grid("vit", {"depth": [6, 12], "dim": [192, 384],
+                             "batch": [1, 8]})
+
+    yields 8 configs ready for :func:`build_family` / ``predict_zoo``.
+    ``family`` is only validated (KeyError on unknown family); axes are
+    passed through untouched.
+    """
+    if family not in FAMILIES:
+        raise KeyError(f"unknown zoo family: {family!r}")
+    keys = list(axes)
+    out: List[Dict[str, Any]] = []
+    for combo in itertools.product(*(axes[k] for k in keys)):
+        out.append(dict(zip(keys, combo)))
+    return out

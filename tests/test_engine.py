@@ -1,0 +1,160 @@
+"""Batched prediction engine: ordering, equivalence, cache, edge cases."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (DIPPM, EngineConfig, PMGNSConfig, PredictionEngine,
+                        pmgns_init)
+from repro.core.batching import (bucket_for, group_by_bucket,
+                                 max_batch_for_bucket, next_pow2,
+                                 sample_from_graph)
+from repro.core.ir import OpGraph, OpNode
+
+
+def _graph(n_nodes, seed=0):
+    """Chain graph with varied ops/flops so predictions differ per graph."""
+    rng = np.random.default_rng(seed)
+    ops = ["dense", "conv", "relu", "add"]
+    nodes = [OpNode(i, ops[i % len(ops)],
+                    (int(rng.integers(1, 16)), int(rng.integers(1, 64))),
+                    flops=float(rng.integers(1, 10_000)),
+                    macs=float(rng.integers(1, 5_000)))
+             for i in range(n_nodes)]
+    edges = [(i, i + 1) for i in range(n_nodes - 1)]
+    return OpGraph(nodes=nodes, edges=edges, meta={"seed": seed, "n": n_nodes})
+
+
+@pytest.fixture(scope="module")
+def dippm():
+    cfg = PMGNSConfig(hidden=32)
+    params = pmgns_init(jax.random.PRNGKey(0), cfg)
+    return DIPPM.from_params(params, cfg)
+
+
+# ---- bucketing utilities ---------------------------------------------------
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 5, 8, 9, 64)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+
+
+def test_max_batch_shrinks_with_bucket():
+    caps = [max_batch_for_bucket(n, 64) for n in (32, 256, 512, 1024)]
+    assert caps[0] == 64 and caps[1] == 64
+    assert caps[1] > caps[2] > caps[3] >= 1
+
+
+def test_group_by_bucket_preserves_order():
+    samples = [sample_from_graph(_graph(n, i))
+               for i, n in enumerate([5, 40, 7, 100, 9])]
+    groups = group_by_bucket(samples)
+    assert set(groups) == {32, 64, 128}
+    assert groups[32] == [0, 2, 4]          # input order within the bucket
+    assert groups[64] == [1] and groups[128] == [3]
+    for size, members in groups.items():
+        for i in members:
+            assert bucket_for(samples[i].n_nodes) == size
+
+
+# ---- engine behavior -------------------------------------------------------
+
+def test_predict_many_matches_looped_predict_graph(dippm):
+    """Core acceptance: batched vs one-at-a-time, same numbers, same order."""
+    sizes = [3, 40, 100, 7, 60, 90, 12, 31, 33]   # spans 3 buckets, shuffled
+    graphs = [_graph(n, seed=i) for i, n in enumerate(sizes)]
+    loop = [dippm.predict_graph(g) for g in graphs]
+    many = dippm.predict_many(graphs)
+    assert len(many) == len(graphs)
+    for a, b in zip(loop, many):
+        np.testing.assert_allclose(
+            [b.latency_ms, b.energy_j, b.memory_mb],
+            [a.latency_ms, a.energy_j, a.memory_mb], atol=1e-5, rtol=1e-5)
+        assert b.mig == a.mig and b.tpu_slice == a.tpu_slice
+        assert b.meta == a.meta              # order preserved across buckets
+
+
+def test_predictions_are_graph_specific(dippm):
+    graphs = [_graph(20, seed=1), _graph(90, seed=2)]
+    p1, p2 = dippm.predict_many(graphs)
+    assert p1.latency_ms != p2.latency_ms
+
+
+def test_compiled_fn_cache_reuse(dippm):
+    eng = PredictionEngine(dippm.params, dippm.cfg)
+    graphs = [_graph(10, seed=i) for i in range(4)]
+    eng.predict_graphs(graphs)               # 4 graphs → one (32, 4) call
+    assert eng.stats.cache_misses == 1
+    assert eng.stats.cache_hits == 0
+    eng.predict_graphs(graphs)               # same shapes → pure cache hit
+    assert eng.stats.cache_misses == 1
+    assert eng.stats.cache_hits == 1
+    eng.predict_graphs([_graph(50, seed=9)])  # new node bucket → miss
+    assert eng.stats.cache_misses == 2
+    assert eng.stats.graphs_predicted == 9
+
+
+def test_empty_and_single_graph(dippm):
+    assert dippm.predict_many([]) == []
+    single = dippm.predict_many([_graph(6, seed=3)])
+    ref = dippm.predict_graph(_graph(6, seed=3))
+    assert len(single) == 1
+    np.testing.assert_allclose(single[0].latency_ms, ref.latency_ms,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_batch_padding_rows_do_not_leak(dippm):
+    """A chunk of 3 pads to batch bucket 4; the phantom row must not
+    perturb real predictions."""
+    eng = PredictionEngine(dippm.params, dippm.cfg)
+    graphs = [_graph(12, seed=i) for i in range(3)]
+    out3 = eng.predict_graphs(graphs)
+    out4 = eng.predict_graphs(graphs + [_graph(12, seed=7)])[:3]
+    for a, b in zip(out3, out4):
+        np.testing.assert_allclose(a.latency_ms, b.latency_ms,
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_memory_envelope_splits_large_buckets(dippm):
+    """With a tiny max_batch the engine must chunk, still in order."""
+    eng = PredictionEngine(dippm.params, dippm.cfg,
+                           EngineConfig(max_batch=2))
+    graphs = [_graph(10, seed=i) for i in range(5)]
+    out = eng.predict_graphs(graphs)
+    assert eng.stats.batches_run == 3        # 2 + 2 + 1
+    ref = [dippm.predict_graph(g) for g in graphs]
+    for a, b in zip(ref, out):
+        np.testing.assert_allclose(a.latency_ms, b.latency_ms,
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_warmup_precompiles(dippm):
+    eng = PredictionEngine(dippm.params, dippm.cfg)
+    n = eng.warmup(node_buckets=(32, 64))
+    assert n == 2
+    eng.predict_graphs([_graph(10, seed=0) for _ in range(64)])
+    assert eng.stats.cache_misses == 2       # all served from warmup
+
+
+def test_predict_zoo_grid(dippm):
+    from repro.zoo.families import variant_grid
+    grid = variant_grid("mobilenet", {"width": [0.35, 0.5],
+                                      "batch": [1], "res": [128]})
+    assert len(grid) == 2
+    out = dippm.predict_zoo("mobilenet", grid)
+    assert [c for c, _ in out] == grid
+    for _, p in out:
+        assert np.isfinite(p.latency_ms)
+
+
+def test_extended_static_mismatch_raises(dippm):
+    """extended_static=True produces 8-dim F_s; a static_dim=5 model must
+    be rejected at construction, not with a shape error mid-jit."""
+    with pytest.raises(ValueError, match="static"):
+        PredictionEngine(dippm.params, dippm.cfg,
+                         EngineConfig(extended_static=True))
+
+
+def test_variant_grid_unknown_family():
+    from repro.zoo.families import variant_grid
+    with pytest.raises(KeyError):
+        variant_grid("nope", {"batch": [1]})
