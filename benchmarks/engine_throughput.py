@@ -92,8 +92,9 @@ def main():
           f"max |diff| = {res['max_abs_diff']:.2e}")
     ok = res["speedup"] >= 3.0 and res["max_abs_diff"] <= 1e-5
     print("PASS" if ok else "FAIL", "(target: ≥3x, |diff| ≤ 1e-5)")
-    return res
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

@@ -2,6 +2,11 @@
 for a few hundred steps, evaluate MAPE per target, save the predictor.
 
     PYTHONPATH=src python examples/train_dippm.py --n-graphs 400 --epochs 20
+
+Long runs survive interruption: pass ``--checkpoint-dir artifacts/ckpt``
+and re-run the same command after a kill — training resumes from the
+latest committed checkpoint and finishes as if uninterrupted (see
+docs/training.md).
 """
 import argparse
 
@@ -20,6 +25,10 @@ def main():
     ap.add_argument("--variant", default="graphsage")
     ap.add_argument("--out", default="artifacts/dippm.pkl")
     ap.add_argument("--save-dataset", default=None)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint every epoch here and resume from it")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the batch axis over all local devices")
     args = ap.parse_args()
 
     recs = build_dataset(n_graphs=args.n_graphs, seed=0,
@@ -34,7 +43,10 @@ def main():
         cfg, records_to_samples(sp["train"]),
         records_to_samples(sp["val"]),
         TrainConfig(epochs=args.epochs, batch_size=32, lr=args.lr,
-                    log_every=1))
+                    log_every=1, data_parallel=args.data_parallel,
+                    checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=1 if args.checkpoint_dir else 0),
+        resume_from=args.checkpoint_dir)
 
     for split in ("val", "test", "unseen"):
         if sp[split]:

@@ -6,7 +6,8 @@ from .node_features import (NODE_FEATURE_DIM, node_feature_matrix,
                             adjacency_matrix, graph_tensors)
 from .static_features import STATIC_FEATURE_DIM, static_features
 from .batching import (GraphSample, collate, batches_by_bucket,
-                       sample_from_graph, group_by_bucket,
+                       sample_from_graph, pad_sample, dense_adj,
+                       stack_epoch_segments, group_by_bucket,
                        max_batch_for_bucket, next_pow2, bucket_for,
                        DEFAULT_BUCKETS)
 from .gnn import (PMGNSConfig, pmgns_init, pmgns_apply, pmgns_infer,

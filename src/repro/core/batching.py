@@ -6,6 +6,14 @@ block-diagonal adjacency + gather/scatter. On TPU the efficient layout is
 the batch is ``[B, N, ...]`` with a node mask — aggregation becomes a batched
 dense matmul that runs on the MXU (see ``repro.kernels.sage_spmm``).
 
+Storage is **sparse until collate**: a :class:`GraphSample` carries an
+``[E, 2]`` edge list, and the dense ``[B, N, N]`` adjacency is materialized
+only when a batch is assembled (:func:`collate`,
+:func:`stack_epoch_segments`, the prediction engine's chunk builder).
+Host memory for a dataset is therefore O(nodes + edges) per sample instead
+of O(N²) — at the paper's 10,508-graph scale the dense layout is tens of
+GB before training starts; the sparse layout is tens of MB.
+
 Buckets keep padding waste bounded: a graph goes to the smallest bucket that
 fits; batches are formed within buckets.
 """
@@ -23,12 +31,31 @@ from .static_features import static_features
 DEFAULT_BUCKETS: Tuple[int, ...] = (32, 64, 128, 256, 512, 1024)
 
 
+def dense_adj(edges: np.ndarray, size: int,
+              out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Densify an ``[E, 2]`` (src, dst) edge list into ``A[dst, src]``.
+
+    Writes into ``out`` (a zeroed ``[size, size]`` view) when given — the
+    batch assemblers pass slices of a preallocated batch array so the
+    dense adjacency never exists per sample.
+    """
+    a = out if out is not None else np.zeros((size, size), dtype=np.float32)
+    if len(edges):
+        a[edges[:, 1], edges[:, 0]] = 1.0
+    return a
+
+
 @dataclasses.dataclass
 class GraphSample:
-    """One dataset point: (A, X, F_s, Y) — paper §4.1."""
+    """One dataset point: (A, X, F_s, Y) — paper §4.1.
 
-    x: np.ndarray           # [N, 32] node features
-    adj: np.ndarray         # [N, N]  A[dst, src]
+    The adjacency is stored as a sparse ``[E, 2]`` (src, dst) edge list;
+    use :func:`collate` (batched) or the :attr:`adj` property (single,
+    allocates) to densify.
+    """
+
+    x: np.ndarray           # [N, 32] node features, padded to the bucket
+    edges: np.ndarray       # [E, 2]  int32 (src, dst), indices < n_nodes
     mask: np.ndarray        # [N]     1 for real nodes
     static: np.ndarray      # [5] or [8]
     y: Optional[np.ndarray]  # [3] (latency_ms, energy_j, memory_mb) or None
@@ -37,6 +64,24 @@ class GraphSample:
     @property
     def n_nodes(self) -> int:
         return int(self.mask.sum())
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def adj(self) -> np.ndarray:
+        """Dense ``[N, N]`` adjacency, densified on demand (allocates)."""
+        return dense_adj(self.edges, self.x.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by this sample (no dense N² term)."""
+        n = self.x.nbytes + self.edges.nbytes + self.mask.nbytes
+        n += self.static.nbytes
+        if self.y is not None:
+            n += self.y.nbytes
+        return n
 
 
 def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
@@ -69,14 +114,65 @@ def group_by_bucket(
 ) -> Dict[int, List[int]]:
     """Group sample *indices* by padded bucket size, preserving input order.
 
-    Shared by training batching (:func:`batches_by_bucket`) and the
-    inference engine (``repro.core.engine``), which needs the indices to
-    restore input order after per-bucket batched execution.
+    Shared by training batching (:func:`batches_by_bucket`), the stacked
+    scan schedule (:func:`stack_epoch_segments`), and the inference engine
+    (``repro.core.engine``), which needs the indices to restore input
+    order after per-bucket batched execution.
     """
     by_bucket: Dict[int, List[int]] = {}
     for i, s in enumerate(samples):
         by_bucket.setdefault(s.x.shape[0], []).append(i)
     return by_bucket
+
+
+def pad_sample(
+    x: np.ndarray,
+    edges: np.ndarray,
+    static: np.ndarray,
+    y: Optional[np.ndarray] = None,
+    meta: Optional[Dict] = None,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    truncate_weight: Optional[np.ndarray] = None,
+) -> GraphSample:
+    """The single padding/truncation path behind every ``GraphSample``.
+
+    Pads ``x``/``mask`` to the smallest bucket that fits and keeps the
+    edge list sparse. Graphs larger than the top bucket are truncated to
+    the heaviest nodes by ``truncate_weight`` (default: the last node
+    feature, ``log1p(flops)``) with edges remapped — rare, and the static
+    features still see the whole graph. Shared by
+    :func:`sample_from_graph` (OpGraph path) and
+    ``repro.dataset.builder.records_to_samples`` (dataset path), which
+    previously duplicated this logic.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+    n = x.shape[0]
+    cap = buckets[-1]
+    if n > cap:
+        w = np.asarray(truncate_weight if truncate_weight is not None
+                       else x[:, -1], dtype=np.float64)
+        keep = np.sort(np.argsort(-w, kind="stable")[:cap])
+        remap = -np.ones((n,), dtype=np.int64)
+        remap[keep] = np.arange(cap)
+        x = x[keep]
+        if len(edges):
+            e = edges[(remap[edges[:, 0]] >= 0) & (remap[edges[:, 1]] >= 0)]
+            edges = (np.stack([remap[e[:, 0]], remap[e[:, 1]]], -1)
+                     .astype(np.int32) if len(e)
+                     else np.zeros((0, 2), dtype=np.int32))
+        n = cap
+    size = bucket_for(n, buckets)
+    xp = np.zeros((size, x.shape[1]), dtype=np.float32)
+    xp[:n] = x
+    mask = np.zeros((size,), dtype=np.float32)
+    mask[:n] = 1.0
+    return GraphSample(
+        x=xp, edges=edges, mask=mask,
+        static=np.asarray(static, dtype=np.float32),
+        y=None if y is None else np.asarray(y, dtype=np.float32),
+        meta=dict(meta or {}),
+    )
 
 
 def sample_from_graph(
@@ -85,55 +181,33 @@ def sample_from_graph(
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     extended_static: bool = False,
 ) -> GraphSample:
-    """Pad one OpGraph into a fixed-size GraphSample.
-
-    Graphs larger than the top bucket are truncated to the *heaviest* nodes
-    (by flops) with totals preserved in the static features — rare, and the
-    static features still see the whole graph.
-    """
-    x = node_feature_matrix(g)
-    n = x.shape[0]
-    cap = buckets[-1]
-    keep = None
-    if n > cap:
-        order = np.argsort([-nd.flops for nd in g.nodes], kind="stable")
-        keep = np.sort(order[:cap])
-        remap = {int(old): i for i, old in enumerate(keep)}
-        x = x[keep]
-        n = cap
-    size = bucket_for(n, buckets)
-
-    adj = np.zeros((size, size), dtype=np.float32)
-    if keep is None:
-        if g.edges:
-            e = np.asarray(g.edges, dtype=np.int64).reshape(-1, 2)
-            adj[e[:, 1], e[:, 0]] = 1.0
-    else:
-        for s, d in g.edges:
-            if s not in remap or d not in remap:
-                continue
-            adj[remap[d], remap[s]] = 1.0
-
-    xp = np.zeros((size, x.shape[1]), dtype=np.float32)
-    xp[:n] = x
-    mask = np.zeros((size,), dtype=np.float32)
-    mask[:n] = 1.0
-    return GraphSample(
-        x=xp, adj=adj, mask=mask,
-        static=static_features(g, extended=extended_static),
-        y=None if y is None else np.asarray(y, dtype=np.float32),
-        meta=dict(g.meta),
+    """Pad one OpGraph into a fixed-size GraphSample (sparse edges)."""
+    return pad_sample(
+        node_feature_matrix(g),
+        np.asarray(g.edges, dtype=np.int32).reshape(-1, 2),
+        static_features(g, extended=extended_static),
+        y=y, meta=dict(g.meta), buckets=buckets,
+        truncate_weight=np.asarray([nd.flops for nd in g.nodes]),
     )
 
 
 def collate(samples: Sequence[GraphSample]) -> Dict[str, np.ndarray]:
-    """Stack same-bucket samples into one batch dict (jit-ready arrays)."""
+    """Stack same-bucket samples into one batch dict (jit-ready arrays).
+
+    This is where the adjacency densifies: the ``[B, N, N]`` batch array
+    is built from each sample's edge list, so dense adjacency memory is
+    O(batch), never O(dataset).
+    """
     sizes = {s.x.shape[0] for s in samples}
     if len(sizes) != 1:
         raise ValueError(f"collate needs a single bucket size, got {sizes}")
+    size = sizes.pop()
+    adj = np.zeros((len(samples), size, size), dtype=np.float32)
+    for i, s in enumerate(samples):
+        dense_adj(s.edges, size, out=adj[i])
     batch = {
         "x": np.stack([s.x for s in samples]),
-        "adj": np.stack([s.adj for s in samples]),
+        "adj": adj,
         "mask": np.stack([s.mask for s in samples]),
         "static": np.stack([s.static for s in samples]),
     }
@@ -167,3 +241,71 @@ def batches_by_bucket(
     if rng is not None:
         rng.shuffle(out)  # type: ignore[arg-type]
     return out
+
+
+def stack_epoch_segments(
+    samples: Sequence[GraphSample],
+    batch_size: int,
+    rng: Optional[np.random.Generator] = None,
+    batch_multiple: int = 1,
+    max_steps: int = 32,
+) -> List[Dict[str, np.ndarray]]:
+    """Stack an epoch into ``[S, B, ...]`` segments for ``lax.scan``.
+
+    Every sample in a bucket lands in a step of the *same* compiled shape:
+    the per-bucket batch size ``B`` is fixed (memory-envelope cap, rounded
+    up to ``batch_multiple`` so a data-parallel mesh divides it), chunks
+    short of ``B`` are completed with zero-weight rows, and at most
+    ``max_steps`` steps stack into one segment — so host/device transient
+    memory is O(max_steps · B · N²) per segment, never O(dataset · N²).
+
+    Each segment dict carries ``x [S,B,N,F]``, ``adj [S,B,N,N]``,
+    ``mask [S,B,N]``, ``static [S,B,D]``, ``y [S,B,T]``, and
+    ``wt [S,B]`` — 1.0 for real rows, 0.0 for batch padding. The trainer's
+    weighted loss makes padded rows exact no-ops, so the scan path matches
+    the eager reference numerically.
+
+    With ``rng``, samples shuffle within buckets and the segment list
+    shuffles across buckets (the scan analogue of ``batches_by_bucket``'s
+    global batch shuffle — step *order within* a segment is the fusion
+    trade-off, so ``max_steps`` also sets the shuffle granularity).
+    """
+    if batch_multiple < 1:
+        raise ValueError(f"batch_multiple must be ≥ 1, got {batch_multiple}")
+    segments: List[Dict[str, np.ndarray]] = []
+    for size, members in sorted(group_by_bucket(samples).items()):
+        bs = max_batch_for_bucket(size, batch_size)
+        bs = -(-bs // batch_multiple) * batch_multiple
+        idx = np.arange(len(members))
+        if rng is not None:
+            rng.shuffle(idx)
+        ordered = [samples[members[j]] for j in idx]
+        if any(s.y is None for s in ordered):
+            raise ValueError("stack_epoch_segments needs labeled samples")
+        feat = ordered[0].x.shape[1]
+        sdim = ordered[0].static.shape[0]
+        tdim = ordered[0].y.shape[0]
+        per_seg = bs * max_steps
+        for start in range(0, len(ordered), per_seg):
+            seg = ordered[start:start + per_seg]
+            n_steps = -(-len(seg) // bs)
+            arrs = {
+                "x": np.zeros((n_steps, bs, size, feat), np.float32),
+                "adj": np.zeros((n_steps, bs, size, size), np.float32),
+                "mask": np.zeros((n_steps, bs, size), np.float32),
+                "static": np.zeros((n_steps, bs, sdim), np.float32),
+                "y": np.ones((n_steps, bs, tdim), np.float32),
+                "wt": np.zeros((n_steps, bs), np.float32),
+            }
+            for k, s in enumerate(seg):
+                si, bi = divmod(k, bs)
+                arrs["x"][si, bi] = s.x
+                dense_adj(s.edges, size, out=arrs["adj"][si, bi])
+                arrs["mask"][si, bi] = s.mask
+                arrs["static"][si, bi] = s.static
+                arrs["y"][si, bi] = s.y
+                arrs["wt"][si, bi] = 1.0
+            segments.append(arrs)
+    if rng is not None:
+        rng.shuffle(segments)  # type: ignore[arg-type]
+    return segments

@@ -32,8 +32,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batching import (DEFAULT_BUCKETS, GraphSample, group_by_bucket,
-                       max_batch_for_bucket, next_pow2, sample_from_graph)
+from .batching import (DEFAULT_BUCKETS, GraphSample, dense_adj,
+                       group_by_bucket, max_batch_for_bucket, next_pow2,
+                       sample_from_graph)
 from .gnn import PMGNSConfig, make_infer_fn
 from .ir import OpGraph
 from .static_features import STATIC_FEATURE_DIM, STATIC_FEATURE_DIM_EXT
@@ -160,7 +161,8 @@ class PredictionEngine:
         mask = np.zeros((bb, node_bucket), dtype=np.float32)
         static = np.zeros((bb, sdim), dtype=np.float32)
         for i, s in enumerate(chunk):
-            x[i], adj[i], mask[i], static[i] = s.x, s.adj, s.mask, s.static
+            x[i], mask[i], static[i] = s.x, s.mask, s.static
+            dense_adj(s.edges, node_bucket, out=adj[i])
         fn = self._infer_fn(node_bucket, bb)
         batch = {"x": jnp.asarray(x), "adj": jnp.asarray(adj),
                  "mask": jnp.asarray(mask), "static": jnp.asarray(static)}

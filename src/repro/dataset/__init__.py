@@ -1,2 +1,3 @@
 from .builder import (DatasetRecord, build_dataset, load_dataset,
-                      save_dataset, split_dataset, records_to_samples)
+                      save_dataset, split_dataset, records_to_samples,
+                      synthetic_samples)

@@ -12,8 +12,10 @@ trace them into OpGraphs, and label every graph with
     Y  — 3 regression targets         (paper §4.1)
 
 Storage is sharded ``.npz`` with edge lists (dense [N,N] adjacency would be
-~10 GB at full scale); :func:`records_to_samples` pads to bucketed dense
-batches for the TPU-friendly training layout.
+~10 GB at full scale); :func:`records_to_samples` pads to bucketed
+sparse-edge ``GraphSample``s, and the dense ``[B, N, N]`` adjacency for the
+TPU-friendly training layout is materialized per batch inside
+``repro.core.batching.collate`` / ``stack_epoch_segments``.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.batching import DEFAULT_BUCKETS, GraphSample, bucket_for
+from ..core.batching import DEFAULT_BUCKETS, GraphSample, pad_sample
 from ..core.node_features import NODE_FEATURE_DIM, node_feature_matrix
 from ..core.static_features import static_features
 from ..perfmodel.cost_model import estimate
@@ -166,30 +168,37 @@ def split_dataset(records: Sequence[DatasetRecord], seed: int = 0,
 
 def records_to_samples(records: Sequence[DatasetRecord],
                        buckets=DEFAULT_BUCKETS) -> List[GraphSample]:
+    """Records → padded sparse-edge ``GraphSample``s (one shared pad path).
+
+    Samples keep the edge list sparse; the dense ``[B, N, N]`` adjacency
+    only exists inside ``repro.core.batching.collate`` (per batch), so a
+    paper-scale dataset stays O(nodes + edges) on the host.
+    """
+    return [pad_sample(r.x, r.edges, r.static, y=r.y,
+                       meta={"family": r.family, **r.meta}, buckets=buckets)
+            for r in records]
+
+
+def synthetic_samples(n: int, seed: int = 0, n_min: int = 4,
+                      n_max: int = 30,
+                      y_scale: float = 100.0) -> List[GraphSample]:
+    """Random labeled ``GraphSample``s (chain + random extra edges).
+
+    A zoo trace costs ~0.5 s/graph; tests and the training-throughput
+    benchmark need thousands of cheap samples with the real storage
+    contract, so they share this generator instead of the real tracer.
+    """
+    rng = np.random.default_rng(seed)
     out: List[GraphSample] = []
-    for r in records:
-        n = r.x.shape[0]
-        cap = buckets[-1]
-        x, edges = r.x, r.edges
-        if n > cap:
-            flop_col = x[:, -1]  # log1p(flops) is the last feature
-            keep = np.sort(np.argsort(-flop_col, kind="stable")[:cap])
-            remap = -np.ones((n,), dtype=np.int64)
-            remap[keep] = np.arange(cap)
-            x = x[keep]
-            if len(edges):
-                e = edges[(remap[edges[:, 0]] >= 0) & (remap[edges[:, 1]] >= 0)]
-                edges = np.stack([remap[e[:, 0]], remap[e[:, 1]]], -1) \
-                    if len(e) else e.reshape(0, 2)
-            n = cap
-        size = bucket_for(n, buckets)
-        xp = np.zeros((size, x.shape[1]), dtype=np.float32)
-        xp[:n] = x
-        adj = np.zeros((size, size), dtype=np.float32)
-        if len(edges):
-            adj[edges[:, 1], edges[:, 0]] = 1.0
-        mask = np.zeros((size,), dtype=np.float32)
-        mask[:n] = 1.0
-        out.append(GraphSample(x=xp, adj=adj, mask=mask, static=r.static,
-                               y=r.y, meta={"family": r.family, **r.meta}))
+    for i in range(n):
+        nn = int(rng.integers(n_min, n_max))
+        x = rng.standard_normal((nn, 32)).astype(np.float32)
+        edges = ([(j, j + 1) for j in range(nn - 1)]
+                 + [(int(rng.integers(nn)), int(rng.integers(nn)))
+                    for _ in range(nn // 2)])
+        out.append(pad_sample(
+            x, np.asarray(edges, np.int32),
+            rng.standard_normal(5).astype(np.float32),
+            y=(rng.random(3) * y_scale + 1).astype(np.float32),
+            meta={"i": i}))
     return out
