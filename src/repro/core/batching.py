@@ -1,13 +1,24 @@
 """Padded graph batching for TPU-friendly GNN training.
 
 GPU GNN stacks (PyTorch-Geometric) batch graphs as one big sparse
-block-diagonal adjacency + gather/scatter. On TPU the efficient layout is
-**dense padded batches**: every graph is padded to a bucket size ``N`` and
-the batch is ``[B, N, ...]`` with a node mask — aggregation becomes a batched
-dense matmul that runs on the MXU (see ``repro.kernels.sage_spmm``).
+block-diagonal adjacency + gather/scatter. This module supports **two**
+TPU-friendly padded batch layouts over the same :class:`GraphSample`
+storage:
 
-Storage is **sparse until collate**: a :class:`GraphSample` carries an
-``[E, 2]`` edge list, and the dense ``[B, N, N]`` adjacency is materialized
+* **dense** (the numerical reference): every graph pads to a node bucket
+  ``N`` and the batch carries ``adj [B, N, N]`` — aggregation is a batched
+  dense matmul on the MXU (``repro.kernels.sage_spmm``). Compute and
+  memory are O(B·N²).
+* **sparse** (``collate(..., sparse=True)``, the hot path): the batch
+  carries a padded edge list ``edges [B, E, 2]`` + ``edge_mask [B, E]``
+  with ``E`` rounded up to an edge bucket (:func:`edge_bucket_for`), so
+  batches bucket by **(N, E)** and compile a bounded shape set.
+  Aggregation is gather→segment-scatter (``repro.kernels.segment_spmm``)
+  — O(B·(N·F + E)); DIPPM DAGs have ~1–3 edges per node, so the dense
+  ``[B, N, N]`` term (≥99 % zeros at the big buckets) never exists.
+
+Storage is **sparse until collate** either way: a :class:`GraphSample`
+carries an ``[E, 2]`` edge list, and per-batch arrays are materialized
 only when a batch is assembled (:func:`collate`,
 :func:`stack_epoch_segments`, the prediction engine's chunk builder).
 Host memory for a dataset is therefore O(nodes + edges) per sample instead
@@ -52,6 +63,12 @@ class GraphSample:
     The adjacency is stored as a sparse ``[E, 2]`` (src, dst) edge list;
     use :func:`collate` (batched) or the :attr:`adj` property (single,
     allocates) to densify.
+
+    **Edge-list contract:** rows are unique (:func:`pad_sample`, the
+    single construction path, deduplicates) — the densified adjacency
+    has {0,1} entries, so the sparse segment path scatters each edge
+    exactly once and both layouts agree. Construct through
+    :func:`pad_sample` rather than directly to keep this invariant.
     """
 
     x: np.ndarray           # [N, 32] node features, padded to the bucket
@@ -97,16 +114,49 @@ def next_pow2(n: int) -> int:
     return 1 << max(0, (int(n) - 1).bit_length())
 
 
+#: Floor for edge buckets: tiny graphs all land on one compiled shape.
+MIN_EDGE_BUCKET = 16
+
+#: Feature-cell proxy for the sparse memory envelope: the widest
+#: activation a batch row carries through the model (hidden width 512).
+SPARSE_ENVELOPE_FEAT = 512
+
+
+def edge_bucket_for(n_edges: int) -> int:
+    """Edge-count bucket: next power of two, floored at MIN_EDGE_BUCKET.
+
+    Sparse batches pad their edge axis to this, so batch shapes — and
+    therefore compiled functions — bucket by (node bucket, edge bucket)
+    instead of exact ragged edge counts.
+    """
+    return max(MIN_EDGE_BUCKET, next_pow2(max(int(n_edges), 1)))
+
+
 def max_batch_for_bucket(size: int, batch_size: int,
-                         ref_size: int = 256) -> int:
+                         ref_size: int = 256,
+                         edges: Optional[int] = None) -> int:
     """Per-bucket batch cap under a constant memory envelope.
 
-    The padded ``[B, N, N]`` adjacency dominates batch memory, so the cap
-    scales ``batch_size`` down for buckets larger than ``ref_size`` such
-    that ``B · N²`` stays within ``batch_size · ref_size²`` cells.
+    **Dense** (``edges=None``): the padded ``[B, N, N]`` adjacency
+    dominates batch memory, so the cap scales ``batch_size`` down for
+    buckets larger than ``ref_size`` such that ``B · N²`` stays within
+    ``batch_size · ref_size²`` cells.
+
+    **Sparse** (``edges`` = the bucket's padded edge count): there is no
+    N² term — a batch row costs O(N·F + E) cells (widest activation
+    ``N · SPARSE_ENVELOPE_FEAT`` plus ~4 cells per edge for endpoints,
+    mask, and per-edge messages) — so the cap is re-derived from that
+    footprint against the same reference envelope at
+    ``(ref_size, 2·ref_size)``. Big buckets keep far larger batches than
+    the quadratic dense rule allows: at N=512 the dense cap is
+    ``batch_size/4``; the sparse cap stays ≈ ``batch_size/2``.
     """
-    base_cells = batch_size * ref_size * ref_size
-    return max(1, min(batch_size, base_cells // (size * size)))
+    if edges is None:
+        base_cells = batch_size * ref_size * ref_size
+        return max(1, min(batch_size, base_cells // (size * size)))
+    ref_fp = ref_size * SPARSE_ENVELOPE_FEAT + 4 * (2 * ref_size)
+    fp = size * SPARSE_ENVELOPE_FEAT + 4 * max(int(edges), 1)
+    return max(1, min(batch_size, (batch_size * ref_fp) // fp))
 
 
 def group_by_bucket(
@@ -147,6 +197,11 @@ def pad_sample(
     """
     x = np.asarray(x, dtype=np.float32)
     edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+    if len(edges):
+        # canonicalize: unique rows, sorted — dense_adj collapses
+        # duplicates by assignment, so dedup here keeps the sparse
+        # segment path (which scatters per edge) numerically identical
+        edges = np.unique(edges, axis=0)
     n = x.shape[0]
     cap = buckets[-1]
     if n > cap:
@@ -191,26 +246,69 @@ def sample_from_graph(
     )
 
 
-def collate(samples: Sequence[GraphSample]) -> Dict[str, np.ndarray]:
+def pack_edges(samples: Sequence[GraphSample],
+               e_pad: Optional[int] = None,
+               edges_out: Optional[np.ndarray] = None,
+               mask_out: Optional[np.ndarray] = None,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad per-sample edge lists into ``edges [B, E, 2]`` + ``edge_mask``.
+
+    ``E`` defaults to the edge bucket of the largest member
+    (:func:`edge_bucket_for`). Padding rows are ``(0, 0)`` with mask 0 —
+    in-range endpoints so gathers stay legal; the mask makes their
+    contribution exactly zero in every sparse kernel. The batch
+    assemblers can pass preallocated ``edges_out``/``mask_out`` views.
+
+    Edge lists are copied as stored: :class:`GraphSample`'s contract
+    guarantees unique rows (``pad_sample`` deduplicates at construction,
+    matching ``dense_adj``'s collapse-by-assignment semantics), so
+    packing is a straight memcpy on the batch-assembly hot path.
+    """
+    if e_pad is None:
+        e_pad = edge_bucket_for(max((s.n_edges for s in samples), default=0))
+    b = len(samples)
+    edges = (edges_out if edges_out is not None
+             else np.zeros((b, e_pad, 2), dtype=np.int32))
+    emask = (mask_out if mask_out is not None
+             else np.zeros((b, e_pad), dtype=np.float32))
+    for i, s in enumerate(samples):
+        e = s.n_edges
+        if e > e_pad:
+            raise ValueError(
+                f"sample has {e} edges, edge bucket is {e_pad}")
+        if e:
+            edges[i, :e] = s.edges
+            emask[i, :e] = 1.0
+    return edges, emask
+
+
+def collate(samples: Sequence[GraphSample],
+            sparse: bool = False,
+            edge_bucket: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Stack same-bucket samples into one batch dict (jit-ready arrays).
 
-    This is where the adjacency densifies: the ``[B, N, N]`` batch array
-    is built from each sample's edge list, so dense adjacency memory is
-    O(batch), never O(dataset).
+    Dense (default): the ``[B, N, N]`` adjacency is built from each
+    sample's edge list, so dense adjacency memory is O(batch), never
+    O(dataset). Sparse: the batch carries ``edges [B, E, 2]`` +
+    ``edge_mask [B, E]`` (E = the chunk's edge bucket) instead — no
+    dense adjacency is ever materialized.
     """
     sizes = {s.x.shape[0] for s in samples}
     if len(sizes) != 1:
         raise ValueError(f"collate needs a single bucket size, got {sizes}")
     size = sizes.pop()
-    adj = np.zeros((len(samples), size, size), dtype=np.float32)
-    for i, s in enumerate(samples):
-        dense_adj(s.edges, size, out=adj[i])
     batch = {
         "x": np.stack([s.x for s in samples]),
-        "adj": adj,
         "mask": np.stack([s.mask for s in samples]),
         "static": np.stack([s.static for s in samples]),
     }
+    if sparse:
+        batch["edges"], batch["edge_mask"] = pack_edges(samples, edge_bucket)
+    else:
+        adj = np.zeros((len(samples), size, size), dtype=np.float32)
+        for i, s in enumerate(samples):
+            dense_adj(s.edges, size, out=adj[i])
+        batch["adj"] = adj
     if all(s.y is not None for s in samples):
         batch["y"] = np.stack([s.y for s in samples])
     return batch
@@ -221,15 +319,21 @@ def batches_by_bucket(
     batch_size: int,
     rng: Optional[np.random.Generator] = None,
     drop_remainder: bool = False,
+    sparse: bool = False,
 ) -> List[Dict[str, np.ndarray]]:
     """Group samples into per-bucket shuffled batches.
 
-    Per-bucket batch size is scaled down for big buckets so the padded
-    [B, N, N] adjacency stays within a constant memory envelope.
+    Per-bucket batch size is scaled down for big buckets so the batch
+    stays within a constant memory envelope — the padded ``[B, N, N]``
+    adjacency cells when dense, the O(N·F + E) footprint when
+    ``sparse=True`` (see :func:`max_batch_for_bucket`).
     """
     out: List[Dict[str, np.ndarray]] = []
     for size, members in sorted(group_by_bucket(samples).items()):
-        bs = max_batch_for_bucket(size, batch_size)
+        e_bucket = (edge_bucket_for(
+            max((samples[j].n_edges for j in members), default=0))
+            if sparse else None)
+        bs = max_batch_for_bucket(size, batch_size, edges=e_bucket)
         idx = np.arange(len(members))
         if rng is not None:
             rng.shuffle(idx)
@@ -237,7 +341,7 @@ def batches_by_bucket(
             chunk = [samples[members[j]] for j in idx[i:i + bs]]
             if drop_remainder and len(chunk) < bs:
                 continue
-            out.append(collate(chunk))
+            out.append(collate(chunk, sparse=sparse, edge_bucket=e_bucket))
     if rng is not None:
         rng.shuffle(out)  # type: ignore[arg-type]
     return out
@@ -249,6 +353,7 @@ def stack_epoch_segments(
     rng: Optional[np.random.Generator] = None,
     batch_multiple: int = 1,
     max_steps: int = 32,
+    sparse: bool = False,
 ) -> List[Dict[str, np.ndarray]]:
     """Stack an epoch into ``[S, B, ...]`` segments for ``lax.scan``.
 
@@ -257,13 +362,19 @@ def stack_epoch_segments(
     up to ``batch_multiple`` so a data-parallel mesh divides it), chunks
     short of ``B`` are completed with zero-weight rows, and at most
     ``max_steps`` steps stack into one segment — so host/device transient
-    memory is O(max_steps · B · N²) per segment, never O(dataset · N²).
+    memory is O(max_steps · B · N²) per segment (dense) or
+    O(max_steps · B · (N·F + E)) (sparse), never O(dataset · N²).
 
-    Each segment dict carries ``x [S,B,N,F]``, ``adj [S,B,N,N]``,
-    ``mask [S,B,N]``, ``static [S,B,D]``, ``y [S,B,T]``, and
-    ``wt [S,B]`` — 1.0 for real rows, 0.0 for batch padding. The trainer's
-    weighted loss makes padded rows exact no-ops, so the scan path matches
-    the eager reference numerically.
+    Each segment dict carries ``x [S,B,N,F]``, ``mask [S,B,N]``,
+    ``static [S,B,D]``, ``y [S,B,T]``, ``wt [S,B]`` (1.0 for real rows,
+    0.0 for batch padding), and either ``adj [S,B,N,N]`` (dense) or
+    ``edges [S,B,E,2]`` + ``edge_mask [S,B,E]`` (``sparse=True``, E = the
+    bucket's edge bucket) — the trainer's scan segments then never touch
+    a dense adjacency. The trainer's weighted loss makes padded rows
+    exact no-ops, so the scan path matches the eager reference
+    numerically; sparse and dense modes share the same grouping, caps,
+    and shuffle order, so they see the identical batch schedule whenever
+    their memory-envelope caps coincide.
 
     With ``rng``, samples shuffle within buckets and the segment list
     shuffles across buckets (the scan analogue of ``batches_by_bucket``'s
@@ -274,7 +385,10 @@ def stack_epoch_segments(
         raise ValueError(f"batch_multiple must be ≥ 1, got {batch_multiple}")
     segments: List[Dict[str, np.ndarray]] = []
     for size, members in sorted(group_by_bucket(samples).items()):
-        bs = max_batch_for_bucket(size, batch_size)
+        e_bucket = (edge_bucket_for(
+            max((samples[j].n_edges for j in members), default=0))
+            if sparse else None)
+        bs = max_batch_for_bucket(size, batch_size, edges=e_bucket)
         bs = -(-bs // batch_multiple) * batch_multiple
         idx = np.arange(len(members))
         if rng is not None:
@@ -291,16 +405,28 @@ def stack_epoch_segments(
             n_steps = -(-len(seg) // bs)
             arrs = {
                 "x": np.zeros((n_steps, bs, size, feat), np.float32),
-                "adj": np.zeros((n_steps, bs, size, size), np.float32),
                 "mask": np.zeros((n_steps, bs, size), np.float32),
                 "static": np.zeros((n_steps, bs, sdim), np.float32),
                 "y": np.ones((n_steps, bs, tdim), np.float32),
                 "wt": np.zeros((n_steps, bs), np.float32),
             }
+            if sparse:
+                arrs["edges"] = np.zeros((n_steps, bs, e_bucket, 2),
+                                         np.int32)
+                arrs["edge_mask"] = np.zeros((n_steps, bs, e_bucket),
+                                             np.float32)
+            else:
+                arrs["adj"] = np.zeros((n_steps, bs, size, size),
+                                       np.float32)
             for k, s in enumerate(seg):
                 si, bi = divmod(k, bs)
                 arrs["x"][si, bi] = s.x
-                dense_adj(s.edges, size, out=arrs["adj"][si, bi])
+                if sparse:
+                    pack_edges([s], e_bucket,
+                               edges_out=arrs["edges"][si, bi:bi + 1],
+                               mask_out=arrs["edge_mask"][si, bi:bi + 1])
+                else:
+                    dense_adj(s.edges, size, out=arrs["adj"][si, bi])
                 arrs["mask"][si, bi] = s.mask
                 arrs["static"][si, bi] = s.static
                 arrs["y"][si, bi] = s.y

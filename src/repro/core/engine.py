@@ -33,7 +33,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .batching import (DEFAULT_BUCKETS, GraphSample, dense_adj,
-                       group_by_bucket, max_batch_for_bucket, next_pow2,
+                       edge_bucket_for, group_by_bucket,
+                       max_batch_for_bucket, next_pow2, pack_edges,
                        sample_from_graph)
 from .gnn import PMGNSConfig, make_infer_fn
 from .ir import OpGraph
@@ -99,15 +100,22 @@ class PredictionEngine:
         self.cfg = cfg
         self.engine_cfg = engine_cfg
         self.stats = EngineStats()
+        #: Engine follows the model's message-passing layout: with
+        #: ``PMGNSConfig(sparse_mp=True)`` chunks carry padded edge lists
+        #: (shape key gains the edge bucket) and no dense adjacency is
+        #: ever built — the O(B·N²) chunk arrays become O(B·E).
+        self.sparse = bool(getattr(cfg, "sparse_mp", False))
         # One jitted closure serves every shape (jax.jit caches one
         # executable per input shape); the key set tracks which
-        # (node_bucket, batch_bucket) shapes have compiled, for stats.
+        # (node_bucket[, edge_bucket], batch_bucket) shapes have
+        # compiled, for stats.
         self._infer = make_infer_fn(cfg)
         self._compiled_shapes: set = set()
 
     # -- compiled-fn cache ---------------------------------------------------
-    def _infer_fn(self, node_bucket: int, batch_bucket: int):
-        key = (node_bucket, batch_bucket)
+    def _infer_fn(self, node_bucket: int, batch_bucket: int,
+                  edge_bucket: Optional[int] = None):
+        key = (node_bucket, edge_bucket, batch_bucket)
         if key in self._compiled_shapes:
             self.stats.cache_hits += 1
         else:
@@ -130,21 +138,39 @@ class PredictionEngine:
             bbs = batch_buckets or (self._batch_cap(n),)
             for b in bbs:
                 b = next_pow2(int(b))       # predict pads to powers of two
-                fn = self._infer_fn(n, b)
                 batch = {
                     "x": jnp.zeros((b, n, self.cfg.node_feat_dim)),
-                    "adj": jnp.zeros((b, n, n)),
                     "mask": jnp.zeros((b, n)),
                     "static": jnp.zeros((b, sdim)),
                 }
+                if self.sparse:
+                    e = self._edge_floor(n)
+                    fn = self._infer_fn(n, b, e)
+                    batch["edges"] = jnp.zeros((b, e, 2), jnp.int32)
+                    batch["edge_mask"] = jnp.zeros((b, e))
+                else:
+                    fn = self._infer_fn(n, b)
+                    batch["adj"] = jnp.zeros((b, n, n))
                 fn(self.params, batch).block_until_ready()
         return self.stats.cache_misses - before
+
+    @staticmethod
+    def _edge_floor(node_bucket: int) -> int:
+        """Per-node-bucket edge-bucket floor: the bucket's typical DAG
+        density (~2 edges/node). Chunks at or below this density all
+        share one compiled shape — the one :meth:`warmup` precompiles —
+        and only rare denser chunks escape to a larger edge bucket."""
+        return edge_bucket_for(2 * node_bucket)
 
     def _batch_cap(self, node_bucket: int) -> int:
         """Chunk-size cap for a bucket: the memory-envelope cap rounded
         *down* to a power of two, so padded chunks never exceed the
-        envelope and full chunks hit one compiled shape."""
-        cap = max_batch_for_bucket(node_bucket, self.engine_cfg.max_batch)
+        envelope and full chunks hit one compiled shape. Sparse chunks
+        have no N² term, so their cap is derived from the O(N·F + E)
+        footprint at the bucket's typical DAG density (~2 edges/node)."""
+        edges = self._edge_floor(node_bucket) if self.sparse else None
+        cap = max_batch_for_bucket(node_bucket, self.engine_cfg.max_batch,
+                                   edges=edges)
         return 1 << (cap.bit_length() - 1)
 
     # -- core batched run ----------------------------------------------------
@@ -157,15 +183,27 @@ class PredictionEngine:
         feat = chunk[0].x.shape[1]
         sdim = chunk[0].static.shape[0]
         x = np.zeros((bb, node_bucket, feat), dtype=np.float32)
-        adj = np.zeros((bb, node_bucket, node_bucket), dtype=np.float32)
         mask = np.zeros((bb, node_bucket), dtype=np.float32)
         static = np.zeros((bb, sdim), dtype=np.float32)
         for i, s in enumerate(chunk):
             x[i], mask[i], static[i] = s.x, s.mask, s.static
-            dense_adj(s.edges, node_bucket, out=adj[i])
-        fn = self._infer_fn(node_bucket, bb)
-        batch = {"x": jnp.asarray(x), "adj": jnp.asarray(adj),
-                 "mask": jnp.asarray(mask), "static": jnp.asarray(static)}
+        batch = {"x": jnp.asarray(x), "mask": jnp.asarray(mask),
+                 "static": jnp.asarray(static)}
+        if self.sparse:
+            eb = max(edge_bucket_for(max(s.n_edges for s in chunk)),
+                     self._edge_floor(node_bucket))
+            edges = np.zeros((bb, eb, 2), dtype=np.int32)
+            emask = np.zeros((bb, eb), dtype=np.float32)
+            pack_edges(chunk, eb, edges_out=edges[:b], mask_out=emask[:b])
+            batch["edges"] = jnp.asarray(edges)
+            batch["edge_mask"] = jnp.asarray(emask)
+            fn = self._infer_fn(node_bucket, bb, eb)
+        else:
+            adj = np.zeros((bb, node_bucket, node_bucket), dtype=np.float32)
+            for i, s in enumerate(chunk):
+                dense_adj(s.edges, node_bucket, out=adj[i])
+            batch["adj"] = jnp.asarray(adj)
+            fn = self._infer_fn(node_bucket, bb)
         out = np.asarray(fn(self.params, batch))
         self.stats.batches_run += 1
         return out[:b]

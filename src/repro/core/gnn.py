@@ -6,15 +6,31 @@ energy J). Table 4 baselines — GCN, GAT, GIN, and a no-GNN MLP — share the
 same skeleton with the message-passing layer swapped, exactly the paper's
 ablation design.
 
-All layers operate on **padded dense batches** (``repro.core.batching``):
+All layers operate on padded batches (``repro.core.batching``) in one of
+two message-passing layouts, selected by ``PMGNSConfig.sparse_mp``:
 
     x     [B, N, F]     node features
-    adj   [B, N, N]     A[dst, src]
     mask  [B, N]        node validity
+    adj   [B, N, N]     A[dst, src]            (dense, the reference)
+    edges [B, E, 2]     (src, dst) int32       (sparse, the hot path)
+    edge_mask [B, E]    1.0 real edge / 0.0 padding
 
-Dense-batched aggregation is a *batched matmul* — the TPU-native layout
-(MXU) — and its hot inner product is available as a Pallas kernel
-(``repro.kernels.sage_spmm``) selected via ``use_pallas=True``.
+**Dense** aggregation is a batched matmul (O(B·N²·F)); **sparse**
+aggregation is gather→segment-scatter over the edge list (O(B·E·F)) —
+DIPPM DAGs carry ~1–3 edges per node, so at the big buckets the sparse
+path does ~N/3 × less aggregation work and never materializes the
+adjacency. Both paths are masked so padding is numerically inert, and
+they agree to float tolerance; the dense path remains the numerical
+reference.
+
+``use_pallas=True`` routes every aggregation through the shared kernel
+dispatchers (``repro.kernels.ops``): dense SAGE/GCN/GIN hit the blocked
+MXU SpMM (``repro.kernels.sage_spmm``), sparse layers hit the segment
+kernels (``repro.kernels.segment_spmm``), and sparse GAT additionally
+uses the edge-softmax kernel. Dense GAT has no Pallas attention path
+(the ``[B, N, N, heads]`` tensor is exactly what ``sparse_mp`` removes)
+and warns once before falling back to jnp; the no-message-passing MLP
+baseline has nothing to accelerate and ignores the flag by design.
 
 Targets are trained in ``log1p`` space (they span 4+ orders of magnitude);
 :func:`decode_targets` maps predictions back to physical units.
@@ -22,6 +38,7 @@ Targets are trained in ``log1p`` space (they span 4+ orders of magnitude);
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
@@ -37,7 +54,7 @@ N_TARGETS = 3
 
 
 # ---------------------------------------------------------------------------
-# aggregation helpers (dense, masked)
+# aggregation helpers (dense + sparse, masked)
 # ---------------------------------------------------------------------------
 
 def _neighbor_mean(adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
@@ -59,6 +76,48 @@ def _gcn_norm_adj(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return a * dinv[:, :, None] * dinv[:, None, :]
 
 
+def _aggregate(h, mode, adj=None, edges=None, edge_mask=None,
+               use_pallas=False):
+    """Shared neighborhood aggregation behind SAGE/GCN/GIN.
+
+    Dispatches on layout (``edges`` present → sparse segment path, else
+    dense matmul) and on ``use_pallas`` (kernel dispatcher vs direct
+    jnp/lax reference). ``edge_mask`` may carry per-edge *weights* (GCN
+    normalization), not just 0/1 validity — every sparse path multiplies
+    the scattered message by it.
+    """
+    if edges is not None:
+        if use_pallas:
+            from ..kernels.ops import segment_aggregate
+            return segment_aggregate(edges, edge_mask, h, mode=mode)
+        from ..kernels.ref import segment_aggregate_ref
+        return segment_aggregate_ref(edges, edge_mask, h, mode=mode)
+    if use_pallas:
+        from ..kernels.ops import dense_aggregate
+        return dense_aggregate(adj, h, mode=mode)
+    return _neighbor_mean(adj, h) if mode == "mean" else _neighbor_sum(adj, h)
+
+
+def _scatter_edges(msgs, dst, edge_mask, n_nodes, use_pallas=False):
+    """Scatter per-edge messages ``[B, E, F]`` into ``[B, N, F]`` sums."""
+    if use_pallas:
+        from ..kernels.ops import segment_scatter
+        return segment_scatter(dst, edge_mask, msgs, n_nodes)
+    from ..kernels.ref import segment_scatter_ref
+    return segment_scatter_ref(dst, edge_mask, msgs, n_nodes)
+
+
+_WARNED_NO_PALLAS = set()
+
+
+def _warn_no_pallas_path(layer: str, hint: str) -> None:
+    if layer not in _WARNED_NO_PALLAS:            # once per process
+        _WARNED_NO_PALLAS.add(layer)
+        warnings.warn(
+            f"use_pallas=True: {layer} has no Pallas path for this "
+            f"layout — falling back to jnp. {hint}", stacklevel=3)
+
+
 # ---------------------------------------------------------------------------
 # message-passing layers
 # ---------------------------------------------------------------------------
@@ -69,12 +128,10 @@ def sage_layer_init(key, d_in: int, d_out: int) -> Params:
             "neigh": nn.linear_init(k2, d_in, d_out, bias=False)}
 
 
-def sage_layer(p: Params, x, adj, mask, *, use_pallas: bool = False):
-    if use_pallas:
-        from ..kernels.ops import sage_aggregate
-        agg = sage_aggregate(adj, x)
-    else:
-        agg = _neighbor_mean(adj, x)
+def sage_layer(p: Params, x, adj, mask, *, edges=None, edge_mask=None,
+               use_pallas: bool = False):
+    agg = _aggregate(x, "mean", adj=adj, edges=edges, edge_mask=edge_mask,
+                     use_pallas=use_pallas)
     y = nn.linear(p["self"], x) + nn.linear(p["neigh"], agg)
     return y * mask[..., None]
 
@@ -83,9 +140,27 @@ def gcn_layer_init(key, d_in: int, d_out: int) -> Params:
     return {"lin": nn.linear_init(key, d_in, d_out)}
 
 
-def gcn_layer(p: Params, x, adj, mask, **_):
-    a = _gcn_norm_adj(adj, mask)
-    y = nn.linear(p["lin"], jnp.einsum("bnm,bmf->bnf", a, x))
+def gcn_layer(p: Params, x, adj, mask, *, edges=None, edge_mask=None,
+              use_pallas: bool = False):
+    if edges is None:
+        a = _gcn_norm_adj(adj, mask)
+        agg = _aggregate(x, "sum", adj=a, use_pallas=use_pallas)
+    else:
+        # sparse D^-1/2 (A + I) D^-1/2 @ x without forming A: the edge
+        # weight dinv[dst]·dinv[src] rides in through edge_mask, and the
+        # masked self-loop contributes dinv²·x directly.
+        from ..kernels.ref import segment_degree_ref
+        n = x.shape[1]
+        src, dst = edges[..., 0], edges[..., 1]
+        deg = segment_degree_ref(edges, edge_mask, n) + mask  # A+I row-sums
+        dinv = jax.lax.rsqrt(jnp.maximum(deg, 1.0))     # [B, N]
+        w = (edge_mask
+             * jnp.take_along_axis(dinv, dst, axis=1)
+             * jnp.take_along_axis(dinv, src, axis=1))
+        agg = _aggregate(x, "sum", edges=edges, edge_mask=w,
+                         use_pallas=use_pallas)
+        agg = agg + (dinv * dinv * mask)[..., None] * x
+    y = nn.linear(p["lin"], agg)
     return y * mask[..., None]
 
 
@@ -99,19 +174,48 @@ def gat_layer_init(key, d_in: int, d_out: int, heads: int = 4) -> Params:
     }
 
 
-def gat_layer(p: Params, x, adj, mask, **_):
+def gat_layer(p: Params, x, adj, mask, *, edges=None, edge_mask=None,
+              use_pallas: bool = False):
     h = p["att_src"].shape[0]
     z = nn.linear(p["proj"], x)                       # [B,N,D]
     B, N, D = z.shape
     zh = z.reshape(B, N, h, D // h)
     es = jnp.einsum("bnhd,hd->bnh", zh, p["att_src"])  # source score
     ed = jnp.einsum("bnhd,hd->bnh", zh, p["att_dst"])  # dest score
-    # e[b, i, j, h] — attention of dst i over src j
+    if edges is not None:
+        # per-edge attention: [B, E, heads] instead of [B, N, N, heads]
+        src, dst = edges[..., 0], edges[..., 1]
+        s = jax.nn.leaky_relu(
+            jnp.take_along_axis(ed, dst[..., None], axis=1)
+            + jnp.take_along_axis(es, src[..., None], axis=1),
+            0.2)                                       # [B, E, heads]
+        if use_pallas:
+            from ..kernels.ops import edge_softmax
+            att = edge_softmax(s, dst, edge_mask, N)
+        else:
+            from ..kernels.ref import edge_softmax_ref
+            att = edge_softmax_ref(s, dst, edge_mask, N)
+        zs = jnp.take_along_axis(z, src[..., None], axis=1)  # [B, E, D]
+        msgs = (zs.reshape(B, -1, h, D // h)
+                * att[..., None]).reshape(B, -1, D)
+        out = _scatter_edges(msgs, dst, edge_mask, N, use_pallas=use_pallas)
+        return out * mask[..., None]
+    if use_pallas:
+        _warn_no_pallas_path(
+            "gat_layer (dense)", "The Pallas GAT path is the sparse "
+            "edge-softmax kernel — enable PMGNSConfig(sparse_mp=True).")
+    # e[b, i, j, h] — attention of dst i over j; explicit masked softmax
+    # with a guarded denominator so an all-padding (empty-neighborhood)
+    # destination row yields exact zeros instead of relying on post-hoc
+    # NaN masking.
     e = jax.nn.leaky_relu(ed[:, :, None, :] + es[:, None, :, :], 0.2)
     neg = jnp.finfo(z.dtype).min
-    e = jnp.where((adj > 0)[..., None], e, neg)
-    att = jax.nn.softmax(e, axis=2)
-    att = jnp.where((adj > 0)[..., None], att, 0.0)
+    live = (adj > 0)[..., None]
+    e = jnp.where(live, e, neg)
+    p_e = jnp.where(live, jnp.exp(e - jnp.max(e, axis=2, keepdims=True)),
+                    0.0)
+    denom = jnp.sum(p_e, axis=2, keepdims=True)
+    att = p_e / jnp.maximum(denom, jnp.finfo(z.dtype).tiny)
     out = jnp.einsum("bijh,bjhd->bihd", att, zh).reshape(B, N, D)
     return out * mask[..., None]
 
@@ -121,8 +225,10 @@ def gin_layer_init(key, d_in: int, d_out: int) -> Params:
             "eps": jnp.zeros(())}
 
 
-def gin_layer(p: Params, x, adj, mask, **_):
-    agg = _neighbor_sum(adj, x)
+def gin_layer(p: Params, x, adj, mask, *, edges=None, edge_mask=None,
+              use_pallas: bool = False):
+    agg = _aggregate(x, "sum", adj=adj, edges=edges, edge_mask=edge_mask,
+                     use_pallas=use_pallas)
     y = nn.mlp(p["mlp"], (1.0 + p["eps"]) * x + agg)
     return y * mask[..., None]
 
@@ -131,8 +237,14 @@ def mlp_layer_init(key, d_in: int, d_out: int) -> Params:
     return {"lin": nn.linear_init(key, d_in, d_out)}
 
 
-def mlp_layer(p: Params, x, adj, mask, **_):
-    """No message passing — the paper's plain-MLP baseline."""
+def mlp_layer(p: Params, x, adj, mask, *, edges=None, edge_mask=None,
+              use_pallas: bool = False):
+    """No message passing — the paper's plain-MLP baseline.
+
+    ``use_pallas`` is accepted but meaningless here by design: there is
+    no aggregation to accelerate, so the flag is intentionally a no-op
+    (not a silent bug — nothing is being skipped).
+    """
     return nn.linear(p["lin"], x) * mask[..., None]
 
 
@@ -163,6 +275,13 @@ class PMGNSConfig:
     n_targets: int = N_TARGETS
     readout: str = "mean_max"        # graph-level pooling
     use_pallas: bool = False
+    #: Sparse edge-list message passing: batches carry ``edges``/
+    #: ``edge_mask`` instead of the dense ``[B, N, N]`` adjacency, and
+    #: every layer aggregates via segment gather/scatter — O(E·F) and
+    #: O(N·F + E) memory instead of O(N²·F) / O(N²). The dense path
+    #: stays the numerical reference; both agree to ≤1e-5
+    #: (``benchmarks/sparse_mp.py`` gates this).
+    sparse_mp: bool = False
 
 
 def pmgns_init(key, cfg: PMGNSConfig) -> Params:
@@ -199,12 +318,33 @@ def _readout(h: jnp.ndarray, mask: jnp.ndarray, kind: str) -> jnp.ndarray:
 def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
                 *, train: bool = False,
                 rng: Optional[jax.Array] = None) -> jnp.ndarray:
-    """Forward pass → [B, n_targets] predictions in log1p space."""
+    """Forward pass → [B, n_targets] predictions in log1p space.
+
+    The batch layout must match ``cfg.sparse_mp``: dense batches carry
+    ``adj``, sparse batches carry ``edges`` + ``edge_mask`` (see
+    ``repro.core.batching.collate``). Mixing them raises — a silent
+    fallback would hide a miswired pipeline.
+    """
     _, layer = _LAYERS[cfg.variant]
-    x, adj, mask = batch["x"], batch["adj"], batch["mask"]
+    x, mask = batch["x"], batch["mask"]
+    if cfg.sparse_mp:
+        if "edges" not in batch or "edge_mask" not in batch:
+            raise ValueError(
+                "PMGNSConfig(sparse_mp=True) needs a sparse batch with "
+                "'edges' and 'edge_mask' — build it via "
+                "collate(samples, sparse=True)")
+        adj, edges, edge_mask = None, batch["edges"], batch["edge_mask"]
+    else:
+        if "adj" not in batch:
+            raise ValueError(
+                "PMGNSConfig(sparse_mp=False) needs a dense batch with "
+                "'adj' — build it via collate(samples) or set "
+                "sparse_mp=True for edge-list batches")
+        adj, edges, edge_mask = batch["adj"], None, None
     h = x
     for i in range(cfg.n_gnn_blocks):
-        h = layer(p["gnn"][f"b{i}"], h, adj, mask, use_pallas=cfg.use_pallas)
+        h = layer(p["gnn"][f"b{i}"], h, adj, mask, edges=edges,
+                  edge_mask=edge_mask, use_pallas=cfg.use_pallas)
         h = jax.nn.relu(h)
         if train and rng is not None:
             rng, sub = jax.random.split(rng)

@@ -102,7 +102,7 @@ class DIPPM:
         """Predict one pre-built :class:`OpGraph` (single-shot path)."""
         import jax.numpy as jnp
         sample = sample_from_graph(g)
-        batch = collate([sample])
+        batch = collate([sample], sparse=self.cfg.sparse_mp)
         jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "y"}
         pred = pmgns_apply(self.params, self.cfg, jb, train=False)
         return make_prediction(np.asarray(decode_targets(pred))[0],

@@ -1,1 +1,3 @@
-from .ops import sage_aggregate, flash_attention, ssd_scan, ssd_decode
+from .ops import (dense_aggregate, edge_softmax, flash_attention,
+                  sage_aggregate, segment_aggregate, segment_scatter,
+                  ssd_decode, ssd_scan)

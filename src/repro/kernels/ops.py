@@ -17,7 +17,9 @@ import jax
 
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
-from .sage_spmm import sage_aggregate_pallas
+from .sage_spmm import dense_aggregate_pallas, sage_aggregate_pallas
+from .segment_spmm import (edge_softmax_pallas, segment_aggregate_pallas,
+                           segment_scatter_pallas)
 from .ssd_scan import ssd_scan_pallas
 
 
@@ -36,10 +38,64 @@ def _interpret() -> bool:
 def sage_aggregate(adj: jax.Array, h: jax.Array,
                    impl: Optional[str] = None) -> jax.Array:
     """Batched GraphSAGE mean aggregation — see ``sage_spmm``."""
+    return dense_aggregate(adj, h, mode="mean", impl=impl)
+
+
+def dense_aggregate(adj: jax.Array, h: jax.Array, *, mode: str = "mean",
+                    impl: Optional[str] = None) -> jax.Array:
+    """Dense masked neighborhood aggregation — see ``sage_spmm``.
+
+    The shared kernel behind every dense-path GNN variant: GraphSAGE
+    (``mean``), GIN (``sum``), GCN (``sum`` over the pre-normalized
+    adjacency).
+    """
     impl = impl or _default_impl()
     if impl == "pallas":
-        return sage_aggregate_pallas(adj, h, interpret=_interpret())
-    return _ref.sage_aggregate_ref(adj, h)
+        return dense_aggregate_pallas(adj, h, mode=mode,
+                                      interpret=_interpret())
+    return _ref.dense_aggregate_ref(adj, h, mode=mode)
+
+
+def segment_aggregate(edges: jax.Array, edge_mask: jax.Array, h: jax.Array,
+                      *, mode: str = "mean",
+                      impl: Optional[str] = None) -> jax.Array:
+    """Sparse edge-list aggregation — see ``segment_spmm``.
+
+    The sparse-path counterpart of :func:`dense_aggregate`: O(E·F)
+    gather→segment-scatter instead of an O(N²·F) dense matmul, and no
+    ``[B, N, N]`` adjacency anywhere. The ``ref`` impl (CPU default) is
+    a differentiable ``jnp.take``/``segment_sum`` pipeline; ``pallas``
+    is the tiled one-hot-matmul kernel.
+    """
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return segment_aggregate_pallas(edges, edge_mask, h, mode=mode,
+                                        interpret=_interpret())
+    return _ref.segment_aggregate_ref(edges, edge_mask, h, mode=mode)
+
+
+def segment_scatter(dst: jax.Array, edge_mask: jax.Array, msgs: jax.Array,
+                    n_nodes: int, impl: Optional[str] = None) -> jax.Array:
+    """Scatter per-edge messages into per-node sums — see ``segment_spmm``."""
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return segment_scatter_pallas(dst, edge_mask, msgs, n_nodes,
+                                      interpret=_interpret())
+    return _ref.segment_scatter_ref(dst, edge_mask, msgs, n_nodes)
+
+
+def edge_softmax(scores: jax.Array, dst: jax.Array, edge_mask: jax.Array,
+                 n_nodes: int, impl: Optional[str] = None) -> jax.Array:
+    """Per-destination softmax over incoming edges — see ``segment_spmm``.
+
+    GAT attention without the dense ``[B, N, N, heads]`` tensor; NaN-safe
+    for destinations whose whole neighborhood is masked out.
+    """
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return edge_softmax_pallas(scores, dst, edge_mask, n_nodes,
+                                   interpret=_interpret())
+    return _ref.edge_softmax_ref(scores, dst, edge_mask, n_nodes)
 
 
 def flash_attention(q, k, v, *, causal: bool = False,

@@ -17,6 +17,95 @@ def sage_aggregate_ref(adj: jax.Array, h: jax.Array) -> jax.Array:
     return jnp.einsum("bnm,bmf->bnf", adj / deg, h).astype(h.dtype)
 
 
+def dense_aggregate_ref(adj: jax.Array, h: jax.Array,
+                        mode: str = "mean") -> jax.Array:
+    """Masked dense neighborhood aggregation (``sum`` | ``mean``)."""
+    if mode == "mean":
+        return sage_aggregate_ref(adj, h)
+    if mode != "sum":
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
+    return jnp.einsum("bnm,bmf->bnf", adj, h).astype(h.dtype)
+
+
+def segment_aggregate_ref(edges: jax.Array, edge_mask: jax.Array,
+                          h: jax.Array, mode: str = "mean") -> jax.Array:
+    """Sparse edge-list aggregation: ``out[b, i] = agg_{e: dst_e=i} h[b, src_e]``.
+
+    The O(E·F) gather→segment-scatter form of :func:`dense_aggregate_ref`
+    (which is O(N²·F)) — the two agree exactly on any edge list whose
+    densified adjacency has {0,1} entries.
+
+    edges: [B, E, 2] int32 (src, dst), padded rows anywhere in-range;
+    edge_mask: [B, E] — 0.0 kills a padded edge's contribution entirely;
+    h: [B, N, F]. Returns [B, N, F].
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
+    n = h.shape[1]
+    src, dst = edges[..., 0], edges[..., 1]
+    msgs = jnp.take_along_axis(
+        h, src[..., None], axis=1) * edge_mask[..., None]   # [B, E, F]
+    out = jax.vmap(
+        lambda d, m: jax.ops.segment_sum(m, d, num_segments=n))(dst, msgs)
+    if mode == "mean":
+        deg = jax.vmap(
+            lambda d, w: jax.ops.segment_sum(w, d, num_segments=n)
+        )(dst, edge_mask)
+        out = out / jnp.maximum(deg, 1.0)[..., None]
+    return out.astype(h.dtype)
+
+
+def segment_scatter_ref(dst: jax.Array, edge_mask: jax.Array,
+                        msgs: jax.Array, n_nodes: int) -> jax.Array:
+    """Scatter per-edge messages into per-node sums.
+
+    dst: [B, E] int32; edge_mask: [B, E]; msgs: [B, E, F] (already
+    gathered/weighted per edge — the GAT attention path). Returns
+    [B, N, F] with ``out[b, i] = Σ_{e: dst_e=i} edge_mask_e · msgs_e``.
+    """
+    m = msgs * edge_mask[..., None]
+    return jax.vmap(
+        lambda d, v: jax.ops.segment_sum(v, d, num_segments=n_nodes)
+    )(dst, m).astype(msgs.dtype)
+
+
+def segment_degree_ref(edges: jax.Array, edge_mask: jax.Array,
+                       n_nodes: int) -> jax.Array:
+    """In-degree per destination node: [B, E, 2] → [B, N]."""
+    dst = edges[..., 1]
+    return jax.vmap(
+        lambda d, w: jax.ops.segment_sum(w, d, num_segments=n_nodes)
+    )(dst, edge_mask)
+
+
+def edge_softmax_ref(scores: jax.Array, dst: jax.Array,
+                     edge_mask: jax.Array, n_nodes: int) -> jax.Array:
+    """Per-destination softmax over incoming edges, NaN-safe.
+
+    scores: [B, E, H] per-edge (multi-head) attention logits;
+    dst: [B, E] int32; edge_mask: [B, E]. Returns [B, E, H] attention
+    weights that sum to 1 over each destination's *real* incoming edges.
+    A destination with no (unmasked) incoming edges — the all-padding
+    neighborhood — yields exact zeros via the masked-denominator guard,
+    never NaN.
+    """
+    neg = jnp.finfo(scores.dtype).min
+    s = jnp.where(edge_mask[..., None] > 0, scores, neg)
+    m = jax.vmap(
+        lambda d, v: jax.ops.segment_max(v, d, num_segments=n_nodes)
+    )(dst, s)                                               # [B, N, H]
+    # empty segments produce -inf/neg maxima; zero them so s - m stays finite
+    m = jnp.where(m > neg, m, 0.0)
+    p = jnp.exp(s - jnp.take_along_axis(m, dst[..., None], axis=1))
+    p = p * edge_mask[..., None]
+    denom = jax.vmap(
+        lambda d, v: jax.ops.segment_sum(v, d, num_segments=n_nodes)
+    )(dst, p)                                               # [B, N, H]
+    denom = jnp.maximum(denom, jnp.finfo(scores.dtype).tiny)
+    return (p / jnp.take_along_axis(denom, dst[..., None], axis=1)
+            ).astype(scores.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, scale: float | None = None,
                   window: int = 0, q_offset: int = 0) -> jax.Array:

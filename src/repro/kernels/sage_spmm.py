@@ -28,22 +28,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sage_kernel(adj_ref, h_ref, o_ref):
+def _sage_kernel(adj_ref, h_ref, o_ref, *, mean: bool):
     adj = adj_ref[0]                                  # [bn, N]
     h = h_ref[0]                                      # [N, bf]
-    deg = jnp.maximum(jnp.sum(adj, axis=-1, keepdims=True), 1.0)
     acc = jnp.dot(adj, h, preferred_element_type=jnp.float32)
-    o_ref[0] = (acc / deg).astype(o_ref.dtype)
+    if mean:
+        deg = jnp.maximum(jnp.sum(adj, axis=-1, keepdims=True), 1.0)
+        acc = acc / deg
+    o_ref[0] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bf", "interpret"))
-def sage_aggregate_pallas(adj: jax.Array, h: jax.Array, *, bn: int = 128,
-                          bf: int = 128, interpret: bool = True) -> jax.Array:
-    """mean_{j∈N(i)} h_j for batched dense graphs.
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "bf", "interpret"))
+def dense_aggregate_pallas(adj: jax.Array, h: jax.Array, *,
+                           mode: str = "mean", bn: int = 128,
+                           bf: int = 128, interpret: bool = True) -> jax.Array:
+    """agg_{j∈N(i)} h_j (``mean`` | ``sum``) for batched dense graphs.
 
     adj: [B, N, N] with adj[b, dst, src] ∈ {0,1};  h: [B, N, F].
     Returns [B, N, F]. N and F are padded to tile multiples internally.
+    The shared dense-aggregation kernel behind the GraphSAGE (mean), GCN
+    (sum over a pre-normalized adjacency), and GIN (sum) Pallas paths.
     """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
     B, N, _ = adj.shape
     F = h.shape[-1]
     bn = min(bn, N)
@@ -58,7 +65,7 @@ def sage_aggregate_pallas(adj: jax.Array, h: jax.Array, *, bn: int = 128,
     Np, Fp = N + pn, F + pf
 
     out = pl.pallas_call(
-        _sage_kernel,
+        functools.partial(_sage_kernel, mean=(mode == "mean")),
         grid=(B, Np // bn, Fp // bf),
         in_specs=[
             pl.BlockSpec((1, bn, Np), lambda b, i, j: (b, i, 0)),
@@ -69,3 +76,10 @@ def sage_aggregate_pallas(adj: jax.Array, h: jax.Array, *, bn: int = 128,
         interpret=interpret,
     )(adj, h)
     return out[:, :N, :F]
+
+
+def sage_aggregate_pallas(adj: jax.Array, h: jax.Array, *, bn: int = 128,
+                          bf: int = 128, interpret: bool = True) -> jax.Array:
+    """mean_{j∈N(i)} h_j — the original GraphSAGE entry point."""
+    return dense_aggregate_pallas(adj, h, mode="mean", bn=bn, bf=bf,
+                                  interpret=interpret)

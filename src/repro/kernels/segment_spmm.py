@@ -1,0 +1,328 @@
+"""Pallas TPU kernels: sparse edge-list segment aggregation + edge softmax.
+
+DIPPM graphs are computation DAGs with ~1–3 edges per node, so the dense
+``[B, N, N]`` adjacency the original layers consume is ≥99 % zeros at the
+big buckets. These kernels run message passing directly on the padded
+edge-list batch format (``repro.core.batching.collate(sparse=True)``):
+
+    src, dst   [B, E]   int32 edge endpoints (E padded to an edge bucket)
+    edge_mask  [B, E]   1.0 real edge / 0.0 padding
+    h          [B, N, F]
+
+``segment_aggregate_pallas`` is a tiled two-pass gather→accumulate-scatter:
+a gather pass over ``(batch, edge-tile)`` reads each edge's source row
+exactly once, then a scatter pass over ``(batch, node-tile, edge-tile)``
+(edge axis innermost) accumulates masked messages into destination-node
+tiles by revisiting the output block — so the dominant gather matmul is
+never recomputed per node tile. Gather/scatter are expressed as
+**one-hot matmuls** — the MXU-native form (TPUs have no vector gather; a
+``[be, N]`` selection matrix against ``h`` is a systolic-array pass, see
+the dense-blocked rationale in ``sage_spmm``) — so the kernels lower on
+real TPUs and run under ``interpret=True`` on CPU unchanged. The dense
+adjacency never exists: HBM traffic per batch is O(N·F + E) instead of
+O(N²).
+
+``edge_softmax_pallas`` (GAT) is two passes sharing the same layout with
+heads on the sublane axis: an **online-softmax** pass (flash-attention
+style running max + rescaled denominator, accumulated across edge tiles)
+produces per-destination ``(max, denom)``, and a per-edge pass gathers
+them back through one-hot matmuls to normalize. This replaces the dense
+path's ``[B, N, N, heads]`` attention tensor with ``[B, E, heads]``.
+
+Padding contract: padded edges carry in-range endpoints (0) and
+``edge_mask == 0`` — every kernel multiplies the scatter one-hot by the
+mask, so padding contributes exactly 0. Fully-masked destinations come
+out as exact zeros (masked-denominator guard), never NaN.
+
+VMEM at the default tiles (bn=be=128, N≤1024, F≤512): h block
+``N·F·4 ≤ 2 MB``, one-hots ≤ 128 KB, accumulators ≤ 256 KB — comfortably
+under the ~16 MB budget, with every matmul dimension a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_DEG_LANES = 128   # degree accumulator lane width (TPU min lane tile)
+
+
+def _seg_gather_kernel(src_ref, h_ref, o_ref, *, n_pad: int):
+    """Per-edge message gather: ``msgs[e] = h[src_e]`` for one edge tile.
+
+    Runs once per (batch, edge tile) — independent of node tiles, so the
+    dominant gather matmul is never recomputed. Padding edges (src 0)
+    gather a legal row; the scatter pass masks them out.
+    """
+    src = src_ref[0]                                    # [be] int32
+    h = h_ref[0]                                        # [N, F]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], n_pad), 1)
+    oh_src = (src[:, None] == cols).astype(h.dtype)     # [be, N]
+    o_ref[0] = jnp.dot(oh_src, h,
+                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _seg_scatter_kernel(dst_ref, em_ref, m_ref, o_ref, deg_ref, *, bn: int):
+    """Scatter-accumulate per-edge messages into a node tile.
+
+    ``edge_mask`` (which may carry per-edge weights, e.g. GCN
+    normalization) is applied exactly once, here.
+    """
+    k = pl.program_id(2)
+    dst = dst_ref[0]                                    # [be]
+    em = em_ref[0]                                      # [be]
+    msgs = m_ref[0]                                     # [be, F]
+    be = dst.shape[0]
+    rows = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bn, be), 0)
+    oh_dst = (dst[None, :] == rows).astype(msgs.dtype) * em[None, :]
+    contrib = jnp.dot(oh_dst, msgs, preferred_element_type=jnp.float32)
+    deg = jnp.sum(oh_dst, axis=1)                       # [bn]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        deg_ref[0] = jnp.zeros_like(deg_ref[0])
+
+    o_ref[0] += contrib.astype(o_ref.dtype)
+    deg_ref[0] += jnp.broadcast_to(deg[:, None],
+                                   (bn, _DEG_LANES)).astype(deg_ref.dtype)
+
+
+def _scatter_with_degree(dst, em, msgs, n_nodes, bn, be, interpret):
+    """Shared scatter pallas_call: ``(sums [B, N, F], deg [B, N, 1])``.
+
+    Inputs must already be padded to tile multiples (``be`` divides E).
+    """
+    B, Ep, F = msgs.shape
+    pn = (-n_nodes) % bn
+    Np = n_nodes + pn
+    out, deg = pl.pallas_call(
+        functools.partial(_seg_scatter_kernel, bn=bn),
+        grid=(B, Np // bn, Ep // be),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, i, k: (b, k)),
+            pl.BlockSpec((1, be), lambda b, i, k: (b, k)),
+            pl.BlockSpec((1, be, F), lambda b, i, k: (b, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn, F), lambda b, i, k: (b, i, 0)),
+            pl.BlockSpec((1, bn, _DEG_LANES), lambda b, i, k: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Np, F), msgs.dtype),
+            jax.ShapeDtypeStruct((B, Np, _DEG_LANES), msgs.dtype),
+        ],
+        interpret=interpret,
+    )(dst, em, msgs)
+    return out[:, :n_nodes], deg[:, :n_nodes, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "be", "interpret"))
+def segment_aggregate_pallas(edges: jax.Array, edge_mask: jax.Array,
+                             h: jax.Array, *, mode: str = "mean",
+                             bn: int = 128, be: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Sparse neighborhood aggregation ``agg_{e: dst_e=i} h[src_e]``.
+
+    edges: [B, E, 2] int32 (src, dst); edge_mask: [B, E]; h: [B, N, F].
+    ``mode`` is ``"sum"`` or ``"mean"`` (mean divides by real in-degree,
+    isolated nodes yield 0). Returns [B, N, F].
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
+    B, E, _ = edges.shape
+    N, F = h.shape[1], h.shape[2]
+    if E == 0:                       # edgeless batch: aggregation is zero
+        return jnp.zeros_like(h)
+    bn = min(bn, max(N, 1))
+    be = min(be, max(E, 1))
+    pn = (-N) % bn
+    pe = (-E) % be
+    src = edges[..., 0].astype(jnp.int32)
+    dst = edges[..., 1].astype(jnp.int32)
+    em = edge_mask.astype(h.dtype)
+    if pe:
+        src = jnp.pad(src, ((0, 0), (0, pe)))
+        dst = jnp.pad(dst, ((0, 0), (0, pe)))
+        em = jnp.pad(em, ((0, 0), (0, pe)))
+    if pn:
+        h = jnp.pad(h, ((0, 0), (0, pn), (0, 0)))
+    Np, Ep = N + pn, E + pe
+
+    # pass 1 — gather per-edge messages, once per edge tile
+    msgs = pl.pallas_call(
+        functools.partial(_seg_gather_kernel, n_pad=Np),
+        grid=(B, Ep // be),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, k: (b, k)),
+            pl.BlockSpec((1, Np, F), lambda b, k: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, be, F), lambda b, k: (b, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ep, F), h.dtype),
+        interpret=interpret,
+    )(src, h)
+    # pass 2 — masked scatter-accumulate into node tiles (+ in-degree)
+    out, deg = _scatter_with_degree(dst, em, msgs, N, bn, be, interpret)
+    if mode == "mean":
+        out = out / jnp.maximum(deg, 1.0)
+    return out.astype(h.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "bn", "be",
+                                             "interpret"))
+def segment_scatter_pallas(dst: jax.Array, edge_mask: jax.Array,
+                           msgs: jax.Array, n_nodes: int, *,
+                           bn: int = 128, be: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Scatter per-edge messages ``[B, E, F]`` into ``[B, N, F]`` sums.
+
+    The scatter half of :func:`segment_aggregate_pallas`, for callers
+    whose messages are already per-edge (GAT: attention-weighted source
+    features).
+    """
+    B, E, F = msgs.shape
+    if E == 0:
+        return jnp.zeros((B, n_nodes, F), msgs.dtype)
+    bn = min(bn, max(n_nodes, 1))
+    be = min(be, max(E, 1))
+    pe = (-E) % be
+    d = dst.astype(jnp.int32)
+    em = edge_mask.astype(msgs.dtype)
+    if pe:
+        d = jnp.pad(d, ((0, 0), (0, pe)))
+        em = jnp.pad(em, ((0, 0), (0, pe)))
+        msgs = jnp.pad(msgs, ((0, 0), (0, pe), (0, 0)))
+    out, _ = _scatter_with_degree(d, em, msgs, n_nodes, bn, be, interpret)
+    return out
+
+
+def _softmax_stats_kernel(s_ref, dst_ref, em_ref, m_ref, d_ref, *,
+                          bn: int):
+    """Online (max, denom) per destination node, heads on sublanes.
+
+    s: [H, be] logits; running m/d: [H, bn] revisited across edge tiles.
+    """
+    k = pl.program_id(2)
+    s = s_ref[0]                                        # [H, be]
+    dst = dst_ref[0]                                    # [be]
+    em = em_ref[0]                                      # [be]
+    be = dst.shape[0]
+    neg = jnp.finfo(s.dtype).min
+
+    rows = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bn, be), 0)
+    oh = (dst[None, :] == rows) & (em[None, :] > 0)     # [bn, be] bool
+
+    @pl.when(k == 0)
+    def _init():
+        m_ref[0] = jnp.full_like(m_ref[0], neg)
+        d_ref[0] = jnp.zeros_like(d_ref[0])
+
+    m_old = m_ref[0]                                    # [H, bn]
+    s_b = jnp.where(oh[None, :, :], s[:, None, :], neg)  # [H, bn, be]
+    m_tile = jnp.max(s_b, axis=-1)                      # [H, bn]
+    m_new = jnp.maximum(m_old, m_tile)
+    # guard: fully-masked rows keep m == neg; exp(neg - neg) would be
+    # exp(0)=1 garbage, so compute against a zeroed safe max instead and
+    # rely on the one-hot to zero the terms.
+    m_safe = jnp.where(m_new > neg, m_new, 0.0)
+    p = jnp.where(oh[None, :, :],
+                  jnp.exp(s_b - m_safe[:, :, None]), 0.0)
+    rescale = jnp.where(m_old > neg, jnp.exp(m_old - m_safe), 0.0)
+    d_ref[0] = d_ref[0] * rescale + jnp.sum(p, axis=-1)
+    m_ref[0] = m_new
+
+
+def _softmax_norm_kernel(s_ref, dst_ref, em_ref, m_ref, d_ref, a_ref, *,
+                         n_pad: int):
+    """Per-edge normalize: gather (m, d) by dst via one-hot matmuls."""
+    s = s_ref[0]                                        # [H, be]
+    dst = dst_ref[0]                                    # [be]
+    em = em_ref[0]                                      # [be]
+    m = m_ref[0]                                        # [H, N]
+    d = d_ref[0]                                        # [H, N]
+    be = dst.shape[0]
+    neg = jnp.finfo(s.dtype).min
+
+    oh = (jax.lax.broadcasted_iota(jnp.int32, (n_pad, be), 0)
+          == dst[None, :]).astype(s.dtype)              # [N, be]
+    m_g = jnp.dot(jnp.where(m > neg, m, 0.0), oh,
+                  preferred_element_type=jnp.float32)   # [H, be]
+    d_g = jnp.dot(d, oh, preferred_element_type=jnp.float32)
+    # mask scores before the exp: a padded edge's raw score is excluded
+    # from the max pass, so it could exceed m_g and overflow exp() into
+    # inf·0 = NaN — the ref kernel masks first, match it exactly.
+    s = jnp.where(em[None, :] > 0, s, neg)
+    p = jnp.exp(s - m_g) * em[None, :]
+    a_ref[0] = (p / jnp.maximum(d_g, jnp.finfo(s.dtype).tiny)
+                ).astype(a_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "bn", "be",
+                                             "interpret"))
+def edge_softmax_pallas(scores: jax.Array, dst: jax.Array,
+                        edge_mask: jax.Array, n_nodes: int, *,
+                        bn: int = 128, be: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Per-destination softmax over incoming edges (GAT attention).
+
+    scores: [B, E, H]; dst: [B, E] int32; edge_mask: [B, E].
+    Returns [B, E, H] weights summing to 1 over each destination's real
+    incoming edges; fully-masked destinations give exact zeros.
+    """
+    B, E, H = scores.shape
+    if E == 0:
+        return jnp.zeros_like(scores)
+    bn = min(bn, max(n_nodes, 1))
+    be = min(be, max(E, 1))
+    pn = (-n_nodes) % bn
+    pe = (-E) % be
+    ph = (-H) % 8                     # f32 sublane multiple
+    s = jnp.moveaxis(scores, -1, 1)                     # [B, H, E]
+    d = dst.astype(jnp.int32)
+    em = edge_mask.astype(scores.dtype)
+    if ph:
+        s = jnp.pad(s, ((0, 0), (0, ph), (0, 0)))
+    if pe:
+        s = jnp.pad(s, ((0, 0), (0, 0), (0, pe)))
+        d = jnp.pad(d, ((0, 0), (0, pe)))
+        em = jnp.pad(em, ((0, 0), (0, pe)))
+    Np, Ep, Hp = n_nodes + pn, E + pe, H + ph
+
+    m, den = pl.pallas_call(
+        functools.partial(_softmax_stats_kernel, bn=bn),
+        grid=(B, Np // bn, Ep // be),
+        in_specs=[
+            pl.BlockSpec((1, Hp, be), lambda b, i, k: (b, 0, k)),
+            pl.BlockSpec((1, be), lambda b, i, k: (b, k)),
+            pl.BlockSpec((1, be), lambda b, i, k: (b, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hp, bn), lambda b, i, k: (b, 0, i)),
+            pl.BlockSpec((1, Hp, bn), lambda b, i, k: (b, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hp, Np), s.dtype),
+            jax.ShapeDtypeStruct((B, Hp, Np), s.dtype),
+        ],
+        interpret=interpret,
+    )(s, d, em)
+
+    att = pl.pallas_call(
+        functools.partial(_softmax_norm_kernel, n_pad=Np),
+        grid=(B, Ep // be),
+        in_specs=[
+            pl.BlockSpec((1, Hp, be), lambda b, k: (b, 0, k)),
+            pl.BlockSpec((1, be), lambda b, k: (b, k)),
+            pl.BlockSpec((1, be), lambda b, k: (b, k)),
+            pl.BlockSpec((1, Hp, Np), lambda b, k: (b, 0, 0)),
+            pl.BlockSpec((1, Hp, Np), lambda b, k: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hp, be), lambda b, k: (b, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, Hp, Ep), s.dtype),
+        interpret=interpret,
+    )(s, d, em, m, den)
+    return jnp.moveaxis(att[:, :H, :E], 1, -1).astype(scores.dtype)

@@ -10,7 +10,11 @@ The trainer is built in four layers:
 1. **Storage** — samples hold sparse edge lists
    (``repro.core.batching.GraphSample``); the dense ``[B, N, N]``
    adjacency exists only inside batch assembly, so host memory is
-   O(nodes + edges) per sample.
+   O(nodes + edges) per sample. With ``PMGNSConfig(sparse_mp=True)``
+   the adjacency never exists at all: segments carry padded edge lists
+   (``edges [S, B, E, 2]`` + ``edge_mask``) and the model aggregates by
+   segment gather/scatter — same schedule, same numerics (within float
+   tolerance), O(N·F + E) device memory per batch row instead of O(N²).
 2. **Step fusion** — each epoch is stacked into per-bucket
    ``[num_steps, B, ...]`` device segments
    (:func:`~repro.core.batching.stack_epoch_segments`) and driven by
@@ -129,8 +133,13 @@ def _eval_batch(params, cfg: PMGNSConfig, batch, delta: float = 1.0):
 
 def evaluate(params, cfg: PMGNSConfig, samples: Sequence[GraphSample],
              batch_size: int = 32) -> Dict[str, float]:
-    """Loss + overall and per-target MAPE over a sample set."""
-    batches = batches_by_bucket(list(samples), batch_size)
+    """Loss + overall and per-target MAPE over a sample set.
+
+    Batch layout follows ``cfg.sparse_mp`` — with it set, eval batches
+    carry padded edge lists and never densify the adjacency.
+    """
+    batches = batches_by_bucket(list(samples), batch_size,
+                                sparse=cfg.sparse_mp)
     losses, apes = [], []
     for b in batches:
         jb = {k: jnp.asarray(v) for k, v in b.items()}
@@ -329,7 +338,8 @@ def train_pmgns(
         t0 = time.time()
         segments = stack_epoch_segments(
             train_samples, cfg.batch_size, rng=_epoch_rng(cfg.seed, epoch),
-            batch_multiple=ndev, max_steps=cfg.scan_steps)
+            batch_multiple=ndev, max_steps=cfg.scan_steps,
+            sparse=model_cfg.sparse_mp)
         total_steps = sum(int(s["wt"].shape[0]) for s in segments)
         keys = _epoch_keys(cfg.seed, epoch, total_steps)
         wl_sum, wn_sum, k0 = 0.0, 0.0, 0

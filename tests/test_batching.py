@@ -1,0 +1,94 @@
+"""Sparse edge-list batch format: buckets, packing, envelope, segments."""
+import numpy as np
+import pytest
+
+from repro.core.batching import (MIN_EDGE_BUCKET, collate, dense_adj,
+                                 edge_bucket_for, max_batch_for_bucket,
+                                 pack_edges, stack_epoch_segments)
+from repro.dataset.builder import synthetic_samples
+
+
+def test_edge_bucket_for():
+    assert edge_bucket_for(0) == MIN_EDGE_BUCKET
+    assert edge_bucket_for(1) == MIN_EDGE_BUCKET
+    assert edge_bucket_for(16) == 16
+    assert edge_bucket_for(17) == 32
+    assert edge_bucket_for(1000) == 1024
+
+
+def test_storage_dedups_and_pack_edges_masks():
+    """pad_sample canonicalizes edge lists (unique rows) so pack_edges
+    is a straight copy; padding rows are (0, 0) with mask 0."""
+    from repro.core.batching import pad_sample
+    dup = pad_sample(np.zeros((6, 32), np.float32),
+                     np.asarray([(0, 1), (0, 1), (2, 3), (0, 1)], np.int32),
+                     np.zeros(5, np.float32))
+    assert dup.n_edges == 2                       # duplicates collapsed
+    samples = synthetic_samples(4, seed=0) + [dup]
+    for s in samples:
+        assert len(np.unique(s.edges, axis=0)) == s.n_edges
+    edges, emask = pack_edges(samples)
+    assert edges.shape[1] == emask.shape[1]
+    assert edges.dtype == np.int32
+    for i, s in enumerate(samples):
+        assert emask[i].sum() == s.n_edges
+        assert (emask[i][:s.n_edges] == 1.0).all()    # real edges first
+        assert (edges[i][emask[i] == 0] == 0).all()   # padding is (0, 0)
+
+
+def test_sparse_collate_matches_dense_adjacency():
+    """Densifying the sparse batch's edge list reproduces collate's adj."""
+    samples = synthetic_samples(6, seed=1)
+    dense = collate(samples)
+    sp = collate(samples, sparse=True)
+    assert "adj" not in sp and "edges" in sp and "edge_mask" in sp
+    assert sp["edges"].shape[1] == edge_bucket_for(
+        max(s.n_edges for s in samples))
+    size = samples[0].x.shape[0]
+    for i in range(len(samples)):
+        live = sp["edges"][i][sp["edge_mask"][i] > 0]
+        np.testing.assert_array_equal(dense_adj(live, size),
+                                      dense["adj"][i])
+    np.testing.assert_array_equal(dense["x"], sp["x"])
+    np.testing.assert_array_equal(dense["y"], sp["y"])
+
+
+def test_sparse_envelope_allows_bigger_batches():
+    """The sparse cap must not inherit the dense N² collapse: at N=512+
+    the dense envelope quarters the batch, sparse keeps most of it."""
+    for n in (512, 1024):
+        dense_cap = max_batch_for_bucket(n, 64)
+        sparse_cap = max_batch_for_bucket(n, 64, edges=2 * n)
+        assert sparse_cap >= 2 * dense_cap
+    # small buckets: both saturate at batch_size
+    assert max_batch_for_bucket(32, 64, edges=64) == 64
+    assert max_batch_for_bucket(256, 64, edges=512) == 64
+
+
+def test_stack_epoch_segments_sparse_layout():
+    samples = synthetic_samples(21, n_min=4, n_max=60, seed=2)
+    segs_d = stack_epoch_segments(samples, batch_size=4, max_steps=2)
+    segs_s = stack_epoch_segments(samples, batch_size=4, max_steps=2,
+                                  sparse=True)
+    assert len(segs_d) == len(segs_s)        # same schedule at small N
+    assert sum(float(s["wt"].sum()) for s in segs_s) == len(samples)
+    for sd, ss in zip(segs_d, segs_s):
+        assert "adj" not in ss and ss["edges"].ndim == 4
+        S, B, E, _ = ss["edges"].shape
+        assert ss["edge_mask"].shape == (S, B, E)
+        assert (S, B) == sd["wt"].shape
+        np.testing.assert_array_equal(sd["x"], ss["x"])
+        np.testing.assert_array_equal(sd["y"], ss["y"])
+        # each step/row's edge list densifies to the dense segment's adj
+        size = ss["x"].shape[2]
+        for si in range(S):
+            for bi in range(B):
+                live = ss["edges"][si, bi][ss["edge_mask"][si, bi] > 0]
+                np.testing.assert_array_equal(
+                    dense_adj(live, size), sd["adj"][si, bi])
+
+
+def test_pack_edges_rejects_overflow():
+    samples = synthetic_samples(1, seed=3)
+    with pytest.raises(ValueError, match="edge bucket"):
+        pack_edges(samples, e_pad=1)

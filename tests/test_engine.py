@@ -158,3 +158,48 @@ def test_variant_grid_unknown_family():
     from repro.zoo.families import variant_grid
     with pytest.raises(KeyError):
         variant_grid("nope", {"batch": [1]})
+
+
+# ---- sparse message-passing engine -----------------------------------------
+
+def test_sparse_engine_matches_dense(dippm):
+    """sparse_mp engine: same predictions, same order, no dense adj."""
+    cfg_s = PMGNSConfig(hidden=32, sparse_mp=True)
+    eng_s = PredictionEngine(dippm.params, cfg_s)
+    sizes = [3, 40, 100, 7, 60, 90, 12]
+    graphs = [_graph(n, seed=i) for i, n in enumerate(sizes)]
+    dense_out = dippm.predict_many(graphs)
+    sparse_out = eng_s.predict_graphs(graphs)
+    for a, b in zip(dense_out, sparse_out):
+        np.testing.assert_allclose(
+            [b.latency_ms, b.energy_j, b.memory_mb],
+            [a.latency_ms, a.energy_j, a.memory_mb], atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_engine_cache_keys_include_edge_bucket(dippm):
+    cfg_s = PMGNSConfig(hidden=32, sparse_mp=True)
+    eng = PredictionEngine(dippm.params, cfg_s)
+    assert eng.sparse
+    eng.predict_graphs([_graph(10, seed=i) for i in range(4)])
+    assert eng.stats.cache_misses == 1
+    # sparser/denser chunks up to the bucket's edge floor (~2 edges/node)
+    # share the warmed shape: 30-node chains reuse the 10-node compile
+    eng.predict_graphs([_graph(30, seed=9 + i) for i in range(4)])
+    assert eng.stats.cache_misses == 1
+    assert eng.stats.cache_hits >= 1
+    # a chunk denser than the floor escapes to a larger edge bucket → miss
+    def _dense_graph(seed):
+        g = _graph(30, seed=seed)
+        return OpGraph(nodes=g.nodes,
+                       edges=[(i, j) for i in range(30)
+                              for j in range(i + 1, 30) if (i + j) % 3],
+                       meta=dict(g.meta))
+    assert len(_dense_graph(0).edges) > 64   # past edge_bucket_for(2 · 32)
+    eng.predict_graphs([_dense_graph(s) for s in range(4)])
+    assert eng.stats.cache_misses == 2
+
+
+def test_sparse_warmup_precompiles(dippm):
+    cfg_s = PMGNSConfig(hidden=32, sparse_mp=True)
+    eng = PredictionEngine(dippm.params, cfg_s)
+    assert eng.warmup(node_buckets=(32,)) == 1
