@@ -63,6 +63,7 @@ def run(n_graphs: int = 64, hidden: int = 128, repeats: int = 3):
     many_out, many_s = timed(
         lambda: dippm.predict_many(graphs), repeats=repeats)
     batches_per_sweep = (st.batches_run - batches0) // repeats
+    stats = dippm.engine().stats.snapshot()    # counters of the timed runs
 
     diffs = [
         max(abs(a.latency_ms - b.latency_ms), abs(a.energy_j - b.energy_j),
@@ -77,6 +78,9 @@ def run(n_graphs: int = 64, hidden: int = 128, repeats: int = 3):
         "max_abs_diff": float(np.max(diffs)),
         "batches_per_sweep": batches_per_sweep,
         "compiles": compiles,
+        "cache_entries": stats.cache_entries,
+        "recompiles": stats.recompiles,
+        "padding_waste_frac": round(stats.padding_waste_frac, 4),
     }
     res["artifact"] = write_json("engine_throughput.json", res)
     return res
@@ -88,6 +92,9 @@ def main():
     print(f"engine : {res['engine_pred_per_s']:9.2f} predictions/s "
           f"({res['compiles']} compiles, {res['batches_per_sweep']} "
           f"batched calls/sweep)")
+    print(f"stats  : {res['cache_entries']} cache entries, "
+          f"{res['recompiles']} recompiles, "
+          f"{res['padding_waste_frac']:.1%} of node rows padding")
     print(f"speedup: {res['speedup']:.2f}x   "
           f"max |diff| = {res['max_abs_diff']:.2e}")
     ok = res["speedup"] >= 3.0 and res["max_abs_diff"] <= 1e-5

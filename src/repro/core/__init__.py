@@ -5,14 +5,17 @@ from .frontends import from_jax, from_json, from_json_file
 from .node_features import (NODE_FEATURE_DIM, node_feature_matrix,
                             adjacency_matrix, graph_tensors)
 from .static_features import STATIC_FEATURE_DIM, static_features
-from .batching import (GraphSample, collate, batches_by_bucket,
-                       sample_from_graph, pad_sample, dense_adj,
-                       stack_epoch_segments, group_by_bucket,
+from .batching import (GraphSample, collate, collate_packed,
+                       batches_by_bucket, sample_from_graph, pad_sample,
+                       dense_adj, stack_epoch_segments, group_by_bucket,
                        max_batch_for_bucket, next_pow2, bucket_for,
-                       DEFAULT_BUCKETS)
+                       pack_graphs, packed_rung, packed_shape,
+                       resolve_packed_budgets, edge_bucket_for, edge_floor,
+                       DEFAULT_BUCKETS, DEFAULT_NODE_BUDGET)
 from .gnn import (PMGNSConfig, pmgns_init, pmgns_apply, pmgns_infer,
-                  make_infer_fn, encode_targets, decode_targets, huber,
-                  mape, TARGET_NAMES)
+                  make_infer_fn, make_staged_packed_infer_fn,
+                  packed_staging_layout, encode_targets, decode_targets,
+                  huber, mape, TARGET_NAMES)
 from .mig import (predict_mig, predict_tpu_slice, predict_pods,
                   MIG_PROFILES, TPU_V5E_SLICES, mig_utilization)
 from .predictor import DIPPM, Prediction, make_prediction

@@ -1,32 +1,46 @@
 """Padded graph batching for TPU-friendly GNN training.
 
 GPU GNN stacks (PyTorch-Geometric) batch graphs as one big sparse
-block-diagonal adjacency + gather/scatter. This module supports **two**
-TPU-friendly padded batch layouts over the same :class:`GraphSample`
-storage:
+block-diagonal adjacency + gather/scatter. This module supports **three**
+TPU-friendly batch layouts over the same :class:`GraphSample` storage:
 
 * **dense** (the numerical reference): every graph pads to a node bucket
   ``N`` and the batch carries ``adj [B, N, N]`` — aggregation is a batched
   dense matmul on the MXU (``repro.kernels.sage_spmm``). Compute and
   memory are O(B·N²).
-* **sparse** (``collate(..., sparse=True)``, the hot path): the batch
-  carries a padded edge list ``edges [B, E, 2]`` + ``edge_mask [B, E]``
-  with ``E`` rounded up to an edge bucket (:func:`edge_bucket_for`), so
-  batches bucket by **(N, E)** and compile a bounded shape set.
-  Aggregation is gather→segment-scatter (``repro.kernels.segment_spmm``)
-  — O(B·(N·F + E)); DIPPM DAGs have ~1–3 edges per node, so the dense
+* **sparse** (``collate(..., sparse=True)``): the batch carries a padded
+  edge list ``edges [B, E, 2]`` + ``edge_mask [B, E]`` with ``E`` rounded
+  up to an edge bucket (:func:`edge_bucket_for`), so batches bucket by
+  **(N, E)** and compile a bounded shape set. Aggregation is
+  gather→segment-scatter (``repro.kernels.segment_spmm``) —
+  O(B·(N·F + E)); DIPPM DAGs have ~1–3 edges per node, so the dense
   ``[B, N, N]`` term (≥99 % zeros at the big buckets) never exists.
+* **packed** (:func:`pack_graphs` + :func:`collate_packed`, the hot
+  path): a set of graphs is flattened into **one node axis** —
+  ``x [P, F]`` with a ``graph_ids [P]`` segment vector, globally-offset
+  ``edges [Q, 2]``, and per-graph ``static [G, ·]`` / ``y [G, ·]`` —
+  the PyG block-diagonal form. A greedy token-budget bin-packer mixes
+  graphs of *different* sizes into one batch, so a 40-node graph rides
+  next to a 700-node graph instead of padding its own bucket row, and
+  compiled shapes collapse to a handful of ``(P, Q, G)`` budgets
+  instead of the (node bucket × edge bucket × batch bucket)
+  cross-product. Graph-level pooling becomes a segment-mean/max readout
+  over ``graph_ids`` (``repro.kernels.segment_spmm.segment_readout``).
 
-Storage is **sparse until collate** either way: a :class:`GraphSample`
-carries an ``[E, 2]`` edge list, and per-batch arrays are materialized
-only when a batch is assembled (:func:`collate`,
-:func:`stack_epoch_segments`, the prediction engine's chunk builder).
-Host memory for a dataset is therefore O(nodes + edges) per sample instead
-of O(N²) — at the paper's 10,508-graph scale the dense layout is tens of
-GB before training starts; the sparse layout is tens of MB.
+Storage is **sparse until collate** in every layout: a
+:class:`GraphSample` carries an ``[E, 2]`` edge list, and per-batch
+arrays are materialized only when a batch is assembled (:func:`collate`,
+:func:`collate_packed`, :func:`stack_epoch_segments`, the prediction
+engine's chunk builder). Host memory for a dataset is therefore
+O(nodes + edges) per sample instead of O(N²) — at the paper's
+10,508-graph scale the dense layout is tens of GB before training
+starts; the sparse layout is tens of MB.
 
 Buckets keep padding waste bounded: a graph goes to the smallest bucket that
-fits; batches are formed within buckets.
+fits; batches are formed within buckets. The packed layout goes further:
+padding exists only at the tail of each budgeted bin, so waste is
+``1 - Σ real / P`` per bin (typically < 10 % under first-fit-decreasing)
+instead of the per-graph bucket quantization.
 """
 from __future__ import annotations
 
@@ -77,6 +91,11 @@ class GraphSample:
     static: np.ndarray      # [5] or [8]
     y: Optional[np.ndarray]  # [3] (latency_ms, energy_j, memory_mb) or None
     meta: Dict = dataclasses.field(default_factory=dict)
+    #: Memoized dense adjacency — filled by the first :attr:`adj` access.
+    #: Samples are frozen after :func:`pad_sample`, so no invalidation is
+    #: needed; treat the returned buffer as read-only.
+    _adj: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_nodes(self) -> int:
@@ -88,16 +107,33 @@ class GraphSample:
 
     @property
     def adj(self) -> np.ndarray:
-        """Dense ``[N, N]`` adjacency, densified on demand (allocates)."""
-        return dense_adj(self.edges, self.x.shape[0])
+        """Dense ``[N, N]`` adjacency, memoized per sample (read-only).
+
+        The first access densifies the edge list; later accesses return
+        the same buffer — repeated ``sample.adj`` touches no longer
+        allocate a fresh ``[N, N]`` array each time.
+        """
+        if self._adj is None:
+            self._adj = dense_adj(self.edges, self.x.shape[0])
+        return self._adj
 
     @property
     def nbytes(self) -> int:
-        """Host bytes held by this sample (no dense N² term)."""
+        """Host bytes held by this sample.
+
+        No dense N² term — unless :attr:`adj` has been touched, in
+        which case the memoized ``[N, N]`` buffer is counted honestly.
+        Batch assembly never touches it (``collate`` /
+        ``stack_epoch_segments`` densify into preallocated batch
+        arrays), so dataset-scale storage stays O(nodes + edges) as
+        long as callers don't walk ``.adj`` across the whole dataset.
+        """
         n = self.x.nbytes + self.edges.nbytes + self.mask.nbytes
         n += self.static.nbytes
         if self.y is not None:
             n += self.y.nbytes
+        if self._adj is not None:
+            n += self._adj.nbytes
         return n
 
 
@@ -130,6 +166,18 @@ def edge_bucket_for(n_edges: int) -> int:
     instead of exact ragged edge counts.
     """
     return max(MIN_EDGE_BUCKET, next_pow2(max(int(n_edges), 1)))
+
+
+def edge_floor(node_bucket: int) -> int:
+    """Per-node-bucket edge-bucket floor at typical DAG density (~2/node).
+
+    The single source of truth shared by the prediction engine's chunk
+    builder and the trainer's segment builder (both previously re-derived
+    it): chunks/segments at or below this density all land on one
+    compiled shape per node bucket, and only rare denser batches escape
+    to a larger edge bucket.
+    """
+    return edge_bucket_for(2 * node_bucket)
 
 
 def max_batch_for_bucket(size: int, batch_size: int,
@@ -314,6 +362,210 @@ def collate(samples: Sequence[GraphSample],
     return batch
 
 
+# ---------------------------------------------------------------------------
+# packed block-diagonal layout: one flat node axis, token-budget bin-packing
+# ---------------------------------------------------------------------------
+
+#: Default node budget ``P`` for packed bins: matches the sparse memory
+#: envelope at the reference point (batch 16 × the 256-node reference
+#: bucket) and holds ~dozens of typical DIPPM DAGs per compiled call.
+DEFAULT_NODE_BUDGET = 4096
+
+
+def resolve_packed_budgets(
+    node_budget: Optional[int] = None,
+    edge_budget: Optional[int] = None,
+    graph_budget: Optional[int] = None,
+) -> Tuple[int, int, int]:
+    """Fill packed-layout budget defaults → ``(P, Q, G)``.
+
+    ``Q`` defaults to ``2·P`` (the same ~2-edges-per-node density floor
+    as :func:`edge_floor`) and ``G`` to ``P // 16`` — graphs smaller than
+    16 nodes hit the graph budget before the node budget, which keeps
+    the per-graph ``static``/``y`` arrays bounded.
+    """
+    p = int(node_budget or DEFAULT_NODE_BUDGET)
+    q = int(edge_budget) if edge_budget else 2 * p
+    g = int(graph_budget) if graph_budget else max(1, p // 16)
+    return p, q, g
+
+
+def packed_rung(p: int, edge_budget: int,
+                graph_budget: int) -> Tuple[int, int]:
+    """``(Q, G)`` rung for a bin padded to node rung ``p``.
+
+    The typical-density companion shapes :func:`packed_shape` assigns
+    (``1.625·P`` edges, ``P/16`` graphs, both clamped to their budgets)
+    — shared with the engine's warmup so the precompiled shape is
+    exactly the one full bins hit. A zero budget disables the rung
+    (returns 0 on that axis).
+    """
+    q = min(edge_budget, p + p // 2 + p // 8) if edge_budget else 0
+    g = min(graph_budget, max(1, p // 16)) if graph_budget else 0
+    return q, g
+
+
+def packed_shape(samples: Sequence[GraphSample],
+                 node_budget: Optional[int] = None,
+                 edge_budget: Optional[int] = None,
+                 graph_budget: Optional[int] = None,
+                 ) -> Tuple[int, int, int]:
+    """Padded ``(P, Q, G)`` shape for one packed bin.
+
+    ``P`` walks a short geometric ladder of powers of two between
+    ``budget/16`` and the budget (≤ 5 rungs): full bins hit the budget
+    shape, part-full bins (the tail of a sweep, a small serving
+    request) hit the nearest rung instead of padding all the way up.
+    ``Q`` and ``G`` are tied to the chosen rung (``1.625·P`` edges,
+    ``P/16`` graphs), so the compiled-shape set stays a handful, not a
+    cross-product. The edge rung undercuts the sparse path's 2-per-node
+    :func:`edge_floor` deliberately: a bin mixes ~dozens of graphs, so
+    its aggregate density concentrates at the zoo *mean* (~1.5
+    edges/node for DIPPM DAGs) rather than the per-graph worst case a
+    padded row must cover; denser bins still escalate safely. An oversize bin (a lone graph larger
+    than a budget — :func:`pack_graphs` never mixes one with others)
+    escalates just the axes it overflows to the next power of two, the
+    packed analogue of the sparse path's escape to a larger edge
+    bucket.
+    """
+    tn = sum(s.n_nodes for s in samples)
+    te = sum(s.n_edges for s in samples)
+    ng = len(samples)
+    cap_p, cap_q, cap_g = (int(node_budget or 0), int(edge_budget or 0),
+                           int(graph_budget or 0))
+    if cap_p and tn <= cap_p:
+        p = min(cap_p, max(next_pow2(max(tn, 1)), max(1, cap_p // 16)))
+    else:
+        p = next_pow2(max(tn, 1))
+    # Q and G step: rung → full budget → power-of-two escalation. The
+    # middle step matters for non-pow2 budgets (a trainer batch of 12):
+    # content over the rung but within budget must use the budget
+    # exactly, never a pow2 that overshoots it.
+    q_rung, g_rung = packed_rung(p, cap_q, cap_g)
+    if cap_q and te <= q_rung:
+        q = q_rung
+    elif cap_q and te <= cap_q:
+        q = cap_q
+    else:
+        q = max(q_rung, edge_bucket_for(te))
+    if cap_g and ng <= g_rung:
+        g = g_rung
+    elif cap_g and ng <= cap_g:
+        g = cap_g
+    else:
+        g = max(g_rung, next_pow2(max(ng, 1)))
+    return p, q, g
+
+
+def pack_graphs(samples: Sequence[GraphSample],
+                node_budget: Optional[int] = None,
+                edge_budget: Optional[int] = None,
+                graph_budget: Optional[int] = None,
+                sort: bool = True) -> List[List[int]]:
+    """Greedy token-budget bin-packing → bins of sample *indices*.
+
+    First-fit-decreasing over real (unpadded) node counts: samples are
+    considered largest-first (``sort=False`` keeps input order — useful
+    for order-sensitivity tests) and each goes into the first open bin
+    whose node/edge/graph budgets still fit, else opens a new bin. Mixing
+    sizes freely is the point: the packed layout has no bucket
+    quantization, so a bin's waste is only its tail padding.
+
+    A sample that alone exceeds a budget gets a bin of its own (the
+    collate escalates that bin's shape). Returns bins of ascending
+    indices; every input index appears in exactly one bin, so callers
+    can scatter per-graph results back to input order.
+    """
+    p, q, g = resolve_packed_budgets(node_budget, edge_budget, graph_budget)
+    order = (sorted(range(len(samples)), key=lambda i: -samples[i].n_nodes)
+             if sort else range(len(samples)))
+    bins: List[List[int]] = []
+    used: List[Tuple[int, int]] = []            # (nodes, edges) per bin
+    for i in order:
+        n, e = samples[i].n_nodes, samples[i].n_edges
+        for b, (un, ue) in enumerate(used):
+            if un + n <= p and ue + e <= q and len(bins[b]) < g:
+                bins[b].append(i)
+                used[b] = (un + n, ue + e)
+                break
+        else:
+            bins.append([i])
+            used.append((n, e))
+    return [sorted(b) for b in bins]
+
+
+def collate_packed(samples: Sequence[GraphSample],
+                   node_budget: Optional[int] = None,
+                   edge_budget: Optional[int] = None,
+                   graph_budget: Optional[int] = None,
+                   *, out: Optional[Dict[str, np.ndarray]] = None,
+                   ) -> Dict[str, np.ndarray]:
+    """Flatten one bin of graphs into the packed batch dict.
+
+    Layout (``P``/``Q``/``G`` from :func:`packed_shape`; with no budgets
+    given the shapes are tight powers of two):
+
+    * ``x [P, F]`` — real node rows of every graph, concatenated
+    * ``mask [P]`` — 1.0 real node / 0.0 tail padding
+    * ``graph_ids [P]`` int32 — segment id of each node's graph
+      (padding rows carry id 0 and are killed by ``mask``)
+    * ``edges [Q, 2]`` int32 — (src, dst) with **globally offset** node
+      indices; padding rows are ``(0, 0)``
+    * ``edge_mask [Q]`` — 1.0 real edge / 0.0 padding
+    * ``static [G, D]`` — per-graph static features (zero rows padding)
+    * ``wt [G]`` — 1.0 real graph / 0.0 padded graph slot
+    * ``y [G, T]`` — only when every sample is labeled (padding 1.0)
+
+    The block-diagonal structure is implicit: edges never cross graph
+    boundaries, so message passing over the flat axis is exactly
+    per-graph message passing, and the segment readout over
+    ``graph_ids`` replaces per-graph masked pooling.
+
+    ``out`` lets a caller supply preallocated (zeroed) destination
+    arrays — e.g. the engine's staging-buffer views — instead of fresh
+    allocations; only the keys present in ``out`` are filled, and the
+    budgets are ignored (the caller already sized the arrays). This
+    keeps ONE fill loop as the packed-layout source of truth for
+    training, eval, and the serving hot path alike.
+    """
+    if not samples:
+        raise ValueError("collate_packed needs at least one sample")
+    labeled = all(s.y is not None for s in samples)
+    if out is None:
+        p, q, g = packed_shape(samples, node_budget, edge_budget,
+                               graph_budget)
+        feat = samples[0].x.shape[1]
+        sdim = samples[0].static.shape[0]
+        out = {
+            "x": np.zeros((p, feat), np.float32),
+            "mask": np.zeros((p,), np.float32),
+            "graph_ids": np.zeros((p,), np.int32),
+            "edges": np.zeros((q, 2), np.int32),
+            "edge_mask": np.zeros((q,), np.float32),
+            "static": np.zeros((g, sdim), np.float32),
+            "wt": np.zeros((g,), np.float32),
+        }
+        if labeled:
+            out["y"] = np.ones((g, samples[0].y.shape[0]), np.float32)
+    off = eoff = 0
+    for gi, s in enumerate(samples):
+        n, e = s.n_nodes, s.n_edges
+        out["x"][off:off + n] = s.x[:n]
+        out["mask"][off:off + n] = 1.0
+        out["graph_ids"][off:off + n] = gi
+        if e:
+            out["edges"][eoff:eoff + e] = s.edges + off
+            out["edge_mask"][eoff:eoff + e] = 1.0
+        out["static"][gi] = s.static
+        if "wt" in out:
+            out["wt"][gi] = 1.0
+        if labeled and "y" in out:
+            out["y"][gi] = s.y
+        off += n
+        eoff += e
+    return out
+
+
 def batches_by_bucket(
     samples: Sequence[GraphSample],
     batch_size: int,
@@ -330,8 +582,9 @@ def batches_by_bucket(
     """
     out: List[Dict[str, np.ndarray]] = []
     for size, members in sorted(group_by_bucket(samples).items()):
-        e_bucket = (edge_bucket_for(
-            max((samples[j].n_edges for j in members), default=0))
+        e_bucket = (max(edge_bucket_for(
+            max((samples[j].n_edges for j in members), default=0)),
+            edge_floor(size))
             if sparse else None)
         bs = max_batch_for_bucket(size, batch_size, edges=e_bucket)
         idx = np.arange(len(members))
@@ -354,6 +607,7 @@ def stack_epoch_segments(
     batch_multiple: int = 1,
     max_steps: int = 32,
     sparse: bool = False,
+    layout: Optional[str] = None,
 ) -> List[Dict[str, np.ndarray]]:
     """Stack an epoch into ``[S, B, ...]`` segments for ``lax.scan``.
 
@@ -365,16 +619,28 @@ def stack_epoch_segments(
     memory is O(max_steps · B · N²) per segment (dense) or
     O(max_steps · B · (N·F + E)) (sparse), never O(dataset · N²).
 
-    Each segment dict carries ``x [S,B,N,F]``, ``mask [S,B,N]``,
+    ``layout`` selects the step format (``"dense"`` | ``"sparse"`` |
+    ``"packed"``; default follows the legacy ``sparse`` flag). Dense and
+    sparse segments carry ``x [S,B,N,F]``, ``mask [S,B,N]``,
     ``static [S,B,D]``, ``y [S,B,T]``, ``wt [S,B]`` (1.0 for real rows,
-    0.0 for batch padding), and either ``adj [S,B,N,N]`` (dense) or
-    ``edges [S,B,E,2]`` + ``edge_mask [S,B,E]`` (``sparse=True``, E = the
-    bucket's edge bucket) — the trainer's scan segments then never touch
-    a dense adjacency. The trainer's weighted loss makes padded rows
-    exact no-ops, so the scan path matches the eager reference
-    numerically; sparse and dense modes share the same grouping, caps,
-    and shuffle order, so they see the identical batch schedule whenever
-    their memory-envelope caps coincide.
+    0.0 for batch padding), plus either ``adj [S,B,N,N]`` or
+    ``edges [S,B,E,2]`` + ``edge_mask [S,B,E]`` (E = the bucket's edge
+    bucket, floored at :func:`edge_floor` so segment shapes stay stable
+    across epochs). **Packed** segments keep the *identical* batch
+    schedule — same grouping, caps (the sparse envelope), and shuffle
+    order, so per-step losses and updates match the padded-sparse
+    reference to float tolerance — but each step's rows are flattened
+    into the packed layout: ``x [S,P,F]``, ``mask [S,P]``,
+    ``graph_ids [S,P]``, ``edges [S,Q,2]`` (globally offset),
+    ``edge_mask [S,Q]``, ``static [S,G,D]``, ``y [S,G,T]``,
+    ``wt [S,G]`` with G = B and (P, Q) the segment's tight
+    power-of-two budgets over real node/edge totals — typically ~half
+    the padded row volume. (Note dropout draws per-activation: packed
+    steps have different activation shapes, so train-mode RNG streams
+    diverge from the padded layouts; disable dropout when comparing.)
+
+    The trainer's weighted loss makes padded rows/graph-slots exact
+    no-ops, so every layout matches the eager reference numerically.
 
     With ``rng``, samples shuffle within buckets and the segment list
     shuffles across buckets (the scan analogue of ``batches_by_bucket``'s
@@ -383,11 +649,18 @@ def stack_epoch_segments(
     """
     if batch_multiple < 1:
         raise ValueError(f"batch_multiple must be ≥ 1, got {batch_multiple}")
+    if layout is None:
+        layout = "sparse" if sparse else "dense"
+    if layout not in ("dense", "sparse", "packed"):
+        raise ValueError(f"layout must be dense|sparse|packed, got {layout!r}")
+    sparse = layout == "sparse"
+    packed = layout == "packed"
     segments: List[Dict[str, np.ndarray]] = []
     for size, members in sorted(group_by_bucket(samples).items()):
-        e_bucket = (edge_bucket_for(
-            max((samples[j].n_edges for j in members), default=0))
-            if sparse else None)
+        e_bucket = (max(edge_bucket_for(
+            max((samples[j].n_edges for j in members), default=0)),
+            edge_floor(size))
+            if (sparse or packed) else None)
         bs = max_batch_for_bucket(size, batch_size, edges=e_bucket)
         bs = -(-bs // batch_multiple) * batch_multiple
         idx = np.arange(len(members))
@@ -403,6 +676,10 @@ def stack_epoch_segments(
         for start in range(0, len(ordered), per_seg):
             seg = ordered[start:start + per_seg]
             n_steps = -(-len(seg) // bs)
+            steps = [seg[k * bs:(k + 1) * bs] for k in range(n_steps)]
+            if packed:
+                segments.append(_pack_segment(steps, bs, feat, sdim, tdim))
+                continue
             arrs = {
                 "x": np.zeros((n_steps, bs, size, feat), np.float32),
                 "mask": np.zeros((n_steps, bs, size), np.float32),
@@ -435,3 +712,34 @@ def stack_epoch_segments(
     if rng is not None:
         rng.shuffle(segments)  # type: ignore[arg-type]
     return segments
+
+
+def _pack_segment(steps: List[List[GraphSample]], bs: int, feat: int,
+                  sdim: int, tdim: int) -> Dict[str, np.ndarray]:
+    """Flatten one segment's steps into packed ``[S, P, ...]`` arrays.
+
+    Every step shares the segment's (P, Q, G=bs) budgets — tight
+    powers of two over the largest step's real node/edge totals — so one
+    ``lax.scan`` shape serves the whole segment.
+    """
+    p = next_pow2(max(sum(s.n_nodes for s in st) for st in steps))
+    q = edge_bucket_for(max(sum(s.n_edges for s in st) for st in steps))
+    n_steps = len(steps)
+    arrs = {
+        "x": np.zeros((n_steps, p, feat), np.float32),
+        "mask": np.zeros((n_steps, p), np.float32),
+        "graph_ids": np.zeros((n_steps, p), np.int32),
+        "edges": np.zeros((n_steps, q, 2), np.int32),
+        "edge_mask": np.zeros((n_steps, q), np.float32),
+        "static": np.zeros((n_steps, bs, sdim), np.float32),
+        "y": np.ones((n_steps, bs, tdim), np.float32),
+        "wt": np.zeros((n_steps, bs), np.float32),
+    }
+    for si, st in enumerate(steps):
+        b = collate_packed(st, node_budget=p, edge_budget=q, graph_budget=bs)
+        for k in arrs:
+            # collate_packed may choose a smaller ladder rung than the
+            # segment budget; the tail stays at its init value (zeros,
+            # or ones for y — both are wt-masked no-ops)
+            arrs[k][si, :b[k].shape[0]] = b[k]
+    return arrs

@@ -21,6 +21,14 @@ compilation across the whole sweep and fill the batch dimension.
 4. **Restore order** — results are scattered back to input positions, so
    ``engine.predict_graphs(gs)[i]`` always corresponds to ``gs[i]``.
 
+With a ``PMGNSConfig(layout="packed")`` model, steps 1–3 are replaced by
+the **packed hot path**: a greedy token-budget bin-packer
+(:func:`~repro.core.batching.pack_graphs`) mixes graphs of different
+sizes onto one flat node axis, each bin ships as two donated staging
+buffers, and the compile cache is keyed by ``(P, Q, G)`` budget rung —
+a handful of shapes for any traffic mix instead of the bucket
+cross-product (see ``benchmarks/packed_batching.py``).
+
 Typical use goes through :meth:`repro.core.predictor.DIPPM.predict_many`;
 instantiate the engine directly only to tune buckets / batch caps or to
 pre-compile with :meth:`PredictionEngine.warmup`.
@@ -32,11 +40,14 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batching import (DEFAULT_BUCKETS, GraphSample, dense_adj,
-                       edge_bucket_for, group_by_bucket,
-                       max_batch_for_bucket, next_pow2, pack_edges,
+from .batching import (DEFAULT_BUCKETS, DEFAULT_NODE_BUDGET, GraphSample,
+                       collate_packed, dense_adj, edge_bucket_for,
+                       edge_floor, group_by_bucket, max_batch_for_bucket,
+                       next_pow2, pack_edges, pack_graphs, packed_rung,
+                       packed_shape, resolve_packed_budgets,
                        sample_from_graph)
-from .gnn import PMGNSConfig, make_infer_fn
+from .gnn import (PMGNSConfig, make_infer_fn, make_staged_packed_infer_fn,
+                  packed_staging_layout)
 from .ir import OpGraph
 from .static_features import STATIC_FEATURE_DIM, STATIC_FEATURE_DIM_EXT
 
@@ -67,16 +78,51 @@ class EngineConfig:
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     max_batch: int = 64
     extended_static: bool = False
+    #: Packed-layout budgets (``PMGNSConfig(layout="packed")`` models):
+    #: every packed chunk pads onto the ``(node_budget, edge_budget,
+    #: graph_budget)`` rung ladder (``repro.core.batching.packed_shape``),
+    #: so the whole engine compiles a handful of shapes (oversize lone
+    #: graphs escalate). ``None`` edge/graph budgets resolve via
+    #: ``repro.core.batching.resolve_packed_budgets`` (``2·node_budget``
+    #: edges, ``node_budget // 16`` graphs).
+    node_budget: int = DEFAULT_NODE_BUDGET
+    edge_budget: Optional[int] = None
+    graph_budget: Optional[int] = None
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters exposed as :attr:`PredictionEngine.stats`."""
+    """Counters exposed as :attr:`PredictionEngine.stats`.
+
+    ``cache_entries`` is the live number of distinct compiled shapes and
+    ``recompiles`` the number of compilation events (they coincide until
+    an eviction story exists — both are kept so dashboards distinguish
+    steady-state size from churn). ``node_slots_total`` /
+    ``node_slots_real`` count padded vs real node rows shipped to the
+    device; :attr:`padding_waste_frac` is the derived waste ratio the
+    packed layout exists to crush.
+    """
 
     graphs_predicted: int = 0
     batches_run: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_entries: int = 0
+    recompiles: int = 0
+    node_slots_total: int = 0
+    node_slots_real: int = 0
+
+    @property
+    def padding_waste_frac(self) -> float:
+        """Fraction of device node rows that were padding (0.0 if no
+        batch has run yet)."""
+        if self.node_slots_total <= 0:
+            return 0.0
+        return 1.0 - self.node_slots_real / self.node_slots_total
+
+    def snapshot(self) -> "EngineStats":
+        """A detached copy (for ``predict_many(..., return_stats=True)``)."""
+        return dataclasses.replace(self)
 
 
 class PredictionEngine:
@@ -100,40 +146,83 @@ class PredictionEngine:
         self.cfg = cfg
         self.engine_cfg = engine_cfg
         self.stats = EngineStats()
-        #: Engine follows the model's message-passing layout: with
-        #: ``PMGNSConfig(sparse_mp=True)`` chunks carry padded edge lists
-        #: (shape key gains the edge bucket) and no dense adjacency is
-        #: ever built — the O(B·N²) chunk arrays become O(B·E).
-        self.sparse = bool(getattr(cfg, "sparse_mp", False))
+        #: Engine follows the model's batch layout
+        #: (``cfg.resolved_layout``): sparse chunks carry padded edge
+        #: lists (shape key gains the edge bucket, no dense adjacency is
+        #: ever built); **packed** chunks flatten mixed-size graphs onto
+        #: one node axis under the engine's ``(P, Q, G)`` budgets, so
+        #: the compile cache is keyed by budget — a handful of entries
+        #: instead of the bucket cross-product.
+        self.layout = cfg.resolved_layout
+        self.sparse = self.layout == "sparse"
+        self.packed = self.layout == "packed"
+        self._budgets = resolve_packed_budgets(
+            engine_cfg.node_budget, engine_cfg.edge_budget,
+            engine_cfg.graph_budget)
         # One jitted closure serves every shape (jax.jit caches one
         # executable per input shape); the key set tracks which
-        # (node_bucket[, edge_bucket], batch_bucket) shapes have
-        # compiled, for stats.
+        # (node_bucket[, edge_bucket], batch_bucket) — or packed
+        # (P, Q, G) budget — shapes have compiled, for stats. Packed
+        # shapes get a staged-buffer closure each (two flat host→device
+        # transfers per chunk, donated on accelerators).
         self._infer = make_infer_fn(cfg)
+        self._staged: dict = {}
         self._compiled_shapes: set = set()
 
     # -- compiled-fn cache ---------------------------------------------------
-    def _infer_fn(self, node_bucket: int, batch_bucket: int,
-                  edge_bucket: Optional[int] = None):
-        key = (node_bucket, edge_bucket, batch_bucket)
+    def _track_shape(self, key: Tuple) -> None:
         if key in self._compiled_shapes:
             self.stats.cache_hits += 1
         else:
             self.stats.cache_misses += 1
+            self.stats.recompiles += 1
             self._compiled_shapes.add(key)
+            self.stats.cache_entries = len(self._compiled_shapes)
+
+    def _infer_fn(self, node_bucket: int, batch_bucket: int,
+                  edge_bucket: Optional[int] = None):
+        self._track_shape((node_bucket, edge_bucket, batch_bucket))
         return self._infer
+
+    def _packed_fn(self, p: int, q: int, g: int):
+        self._track_shape(("packed", p, q, g))
+        key = (p, q, g)
+        if key not in self._staged:
+            self._staged[key] = make_staged_packed_infer_fn(
+                self.cfg, p, q, g)
+        return self._staged[key]
 
     def warmup(self, node_buckets: Optional[Sequence[int]] = None,
                batch_buckets: Optional[Sequence[int]] = None) -> int:
         """Pre-compile for the given shape grid (serving cold-start).
 
-        Defaults to every node bucket × the full per-bucket batch cap.
+        Defaults to every node bucket × the full per-bucket batch cap —
+        or, for a packed-layout engine, the top budget-rung shape that
+        full bins hit (``P`` = the node budget with its typical-density
+        edge/graph rungs — the shape a steady stream of full bins runs;
+        part-full bins on lower rungs still compile on first sight).
         Returns the number of functions compiled.
         """
         import jax.numpy as jnp
-        node_buckets = tuple(node_buckets or self.engine_cfg.buckets)
         before = self.stats.cache_misses
         sdim = self.cfg.static_dim
+        if self.packed:
+            if node_buckets or batch_buckets:
+                raise ValueError(
+                    "packed-layout engines have no node/batch buckets to "
+                    "warm — shapes follow the (node_budget, edge_budget, "
+                    "graph_budget) rung ladder; call warmup() with no "
+                    "arguments")
+            nb, eb, gb = self._budgets
+            # the rung packed_shape assigns a full typical-density bin
+            p = nb
+            q, g = packed_rung(p, eb, gb)
+            fn = self._packed_fn(p, q, g)
+            _, _, _, f_len, i_len = packed_staging_layout(self.cfg, p, q, g)
+            fn(self.params, jnp.zeros((f_len,)),
+               jnp.zeros((i_len,), jnp.int32)).block_until_ready()
+            return self.stats.cache_misses - before
+        node_buckets = tuple(node_buckets or self.engine_cfg.buckets)
         for n in node_buckets:
             bbs = batch_buckets or (self._batch_cap(n),)
             for b in bbs:
@@ -156,11 +245,12 @@ class PredictionEngine:
 
     @staticmethod
     def _edge_floor(node_bucket: int) -> int:
-        """Per-node-bucket edge-bucket floor: the bucket's typical DAG
-        density (~2 edges/node). Chunks at or below this density all
+        """Per-node-bucket edge-bucket floor — delegates to the shared
+        :func:`repro.core.batching.edge_floor` (also used by the
+        trainer's segment builder). Chunks at or below that density all
         share one compiled shape — the one :meth:`warmup` precompiles —
         and only rare denser chunks escape to a larger edge bucket."""
-        return edge_bucket_for(2 * node_bucket)
+        return edge_floor(node_bucket)
 
     def _batch_cap(self, node_bucket: int) -> int:
         """Chunk-size cap for a bucket: the memory-envelope cap rounded
@@ -206,23 +296,80 @@ class PredictionEngine:
             fn = self._infer_fn(node_bucket, bb)
         out = np.asarray(fn(self.params, batch))
         self.stats.batches_run += 1
+        self.stats.node_slots_total += bb * node_bucket
+        self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
         return out[:b]
+
+    def _stage_packed(self, chunk: Sequence[GraphSample], p: int, q: int,
+                      g: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Packed chunk builder: flatten a bin into the two staging
+        buffers consumed by the staged infer fn (float32:
+        ``x ⊕ mask ⊕ edge_mask ⊕ static``; int32:
+        ``edges ⊕ graph_ids``). The fill itself is
+        :func:`~repro.core.batching.collate_packed` writing through
+        views into the flat buffers — one layout source of truth, one
+        pass, zero extra copies.
+        """
+        feat = self.cfg.node_feat_dim
+        sdim = self.cfg.static_dim
+        o1, o2, o3, f_len, i_len = packed_staging_layout(self.cfg, p, q, g)
+        fbuf = np.zeros(f_len, np.float32)
+        ibuf = np.zeros(i_len, np.int32)
+        collate_packed(chunk, out={
+            "x": fbuf[:o1].reshape(p, feat),
+            "mask": fbuf[o1:o2],
+            "edge_mask": fbuf[o2:o3],
+            "static": fbuf[o3:].reshape(g, sdim),
+            "edges": ibuf[:2 * q].reshape(q, 2),
+            "graph_ids": ibuf[2 * q:],
+        })
+        return fbuf, ibuf
+
+    def _run_packed(self, chunk: Sequence[GraphSample]) -> np.ndarray:
+        """Run one packed bin; returns ``[len(chunk), n_targets]``.
+
+        The bin flattens onto a rung of the engine's ``(P, Q, G)``
+        budget ladder (:func:`~repro.core.batching.packed_shape`); an
+        oversize lone graph escalates its shape. The chunk ships as two
+        flat staging buffers which the jitted apply slices and — on
+        accelerator backends — takes by donation, so chunk arrays and
+        model activations share device memory.
+        """
+        nb, eb, gb = self._budgets
+        p, q, g = packed_shape(chunk, nb, eb, gb)
+        fbuf, ibuf = self._stage_packed(chunk, p, q, g)
+        fn = self._packed_fn(p, q, g)
+        out = np.asarray(fn(self.params, fbuf, ibuf))
+        self.stats.batches_run += 1
+        self.stats.node_slots_total += p
+        self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
+        return out[:len(chunk)]
 
     def predict_samples(self, samples: Sequence[GraphSample]) -> np.ndarray:
         """Predict targets for padded samples, in input order.
 
         Returns ``[len(samples), n_targets]`` physical-unit predictions
-        (latency ms, energy J, memory MB).
+        (latency ms, energy J, memory MB). Packed-layout engines
+        bin-pack mixed-size graphs onto the flat node axis
+        (:func:`~repro.core.batching.pack_graphs`) instead of grouping
+        by node bucket; results are scattered back to input order either
+        way.
         """
         samples = list(samples)
         out = np.zeros((len(samples), self.cfg.n_targets), dtype=np.float32)
         if not samples:
             return out
-        for size, members in sorted(group_by_bucket(samples).items()):
-            cap = self._batch_cap(size)
-            for i in range(0, len(members), cap):
-                idx = members[i:i + cap]
-                out[idx] = self._run_chunk(size, [samples[j] for j in idx])
+        if self.packed:
+            nb, eb, gb = self._budgets
+            for idx in pack_graphs(samples, nb, eb, gb):
+                out[idx] = self._run_packed([samples[j] for j in idx])
+        else:
+            for size, members in sorted(group_by_bucket(samples).items()):
+                cap = self._batch_cap(size)
+                for i in range(0, len(members), cap):
+                    idx = members[i:i + cap]
+                    out[idx] = self._run_chunk(size,
+                                               [samples[j] for j in idx])
         self.stats.graphs_predicted += len(samples)
         return out
 

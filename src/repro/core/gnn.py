@@ -6,14 +6,27 @@ energy J). Table 4 baselines — GCN, GAT, GIN, and a no-GNN MLP — share the
 same skeleton with the message-passing layer swapped, exactly the paper's
 ablation design.
 
-All layers operate on padded batches (``repro.core.batching``) in one of
-two message-passing layouts, selected by ``PMGNSConfig.sparse_mp``:
+All layers operate on batches (``repro.core.batching``) in one of three
+layouts, selected by ``PMGNSConfig.layout`` (``sparse_mp`` is the legacy
+alias for ``layout="sparse"``):
 
     x     [B, N, F]     node features
     mask  [B, N]        node validity
     adj   [B, N, N]     A[dst, src]            (dense, the reference)
-    edges [B, E, 2]     (src, dst) int32       (sparse, the hot path)
+    edges [B, E, 2]     (src, dst) int32       (sparse)
     edge_mask [B, E]    1.0 real edge / 0.0 padding
+
+    x     [P, F]        packed: ONE flat node axis for many graphs
+    graph_ids [P]       segment id of each node's graph
+    edges [Q, 2]        globally-offset block-diagonal edge list
+    static/y [G, ·]     per-graph rows         (packed, the hot path)
+
+**Packed** batches (``collate_packed``) run the sparse segment layers
+over the flat axis as a batch of one — block-diagonal edges keep graphs
+independent — and pool with a fused segment-mean/max readout over
+``graph_ids`` (``repro.kernels.segment_spmm.segment_readout_pallas``)
+instead of per-graph masked pooling, so mixed-size graphs share one
+compiled shape with no bucket padding.
 
 **Dense** aggregation is a batched matmul (O(B·N²·F)); **sparse**
 aggregation is gather→segment-scatter over the edge list (O(B·E·F)) —
@@ -280,8 +293,30 @@ class PMGNSConfig:
     #: every layer aggregates via segment gather/scatter — O(E·F) and
     #: O(N·F + E) memory instead of O(N²·F) / O(N²). The dense path
     #: stays the numerical reference; both agree to ≤1e-5
-    #: (``benchmarks/sparse_mp.py`` gates this).
+    #: (``benchmarks/sparse_mp.py`` gates this). Legacy alias for
+    #: ``layout="sparse"``.
     sparse_mp: bool = False
+    #: Batch layout: ``"auto"`` (dense, or sparse when ``sparse_mp``),
+    #: ``"dense"``, ``"sparse"``, or ``"packed"`` — the block-diagonal
+    #: flat-node-axis layout (``repro.core.batching.collate_packed``):
+    #: one ``x [P, F]`` axis for the whole batch, segment message
+    #: passing over globally-offset edges, and a segment-mean/max graph
+    #: readout over ``graph_ids`` instead of per-graph masked pooling.
+    #: All three layouts agree to ≤1e-5
+    #: (``benchmarks/packed_batching.py`` gates this).
+    layout: str = "auto"
+
+    @property
+    def resolved_layout(self) -> str:
+        """The effective batch layout: explicit ``layout`` wins; ``auto``
+        follows the legacy ``sparse_mp`` flag."""
+        if self.layout == "auto":
+            return "sparse" if self.sparse_mp else "dense"
+        if self.layout not in ("dense", "sparse", "packed"):
+            raise ValueError(
+                f"layout must be auto|dense|sparse|packed, "
+                f"got {self.layout!r}")
+        return self.layout
 
 
 def pmgns_init(key, cfg: PMGNSConfig) -> Params:
@@ -315,24 +350,61 @@ def _readout(h: jnp.ndarray, mask: jnp.ndarray, kind: str) -> jnp.ndarray:
     return jnp.concatenate([mean, mx], axis=-1)
 
 
+def _readout_packed(h, graph_ids, node_mask, n_graphs, kind,
+                    use_pallas=False):
+    """Segment-pooled graph readout over the packed flat node axis.
+
+    The packed counterpart of :func:`_readout`: ``h [P, F]`` →
+    ``[G, F or 2F]`` via the fused segment-mean/max kernel (or its lax
+    reference) instead of per-graph masked pooling.
+    """
+    if use_pallas:
+        from ..kernels.ops import segment_readout
+        return segment_readout(h, graph_ids, node_mask, n_graphs, kind=kind)
+    from ..kernels.ref import segment_readout_ref
+    return segment_readout_ref(h, graph_ids, node_mask, n_graphs, kind=kind)
+
+
 def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
                 *, train: bool = False,
                 rng: Optional[jax.Array] = None) -> jnp.ndarray:
     """Forward pass → [B, n_targets] predictions in log1p space.
 
-    The batch layout must match ``cfg.sparse_mp``: dense batches carry
-    ``adj``, sparse batches carry ``edges`` + ``edge_mask`` (see
-    ``repro.core.batching.collate``). Mixing them raises — a silent
-    fallback would hide a miswired pipeline.
+    The batch layout must match ``cfg.resolved_layout``: dense batches
+    carry ``adj``, sparse batches carry ``edges`` + ``edge_mask`` (see
+    ``repro.core.batching.collate``), packed batches carry the flat
+    ``x [P, F]`` / ``graph_ids [P]`` / globally-offset ``edges [Q, 2]``
+    format (``repro.core.batching.collate_packed``) and return one row
+    per *graph slot* ``[G, n_targets]``. Mixing layouts raises — a
+    silent fallback would hide a miswired pipeline.
+
+    Packed message passing reuses the sparse segment layers unchanged:
+    the flat axis rides as a batch of one, the block-diagonal edge list
+    keeps graphs independent, and only the readout changes — a
+    segment-mean/max pool over ``graph_ids`` instead of per-graph
+    masked pooling.
     """
     _, layer = _LAYERS[cfg.variant]
+    layout = cfg.resolved_layout
     x, mask = batch["x"], batch["mask"]
-    if cfg.sparse_mp:
+    packed = layout == "packed"
+    if packed:
+        if any(k not in batch for k in ("graph_ids", "edges", "edge_mask")):
+            raise ValueError(
+                "PMGNSConfig(layout='packed') needs a packed batch with "
+                "'graph_ids', 'edges', and 'edge_mask' — build it via "
+                "collate_packed(samples)")
+        # flat node axis rides as a batch of one through the sparse layers
+        x, mask_mp = x[None], mask[None]
+        adj = None
+        edges, edge_mask = batch["edges"][None], batch["edge_mask"][None]
+    elif layout == "sparse":
         if "edges" not in batch or "edge_mask" not in batch:
             raise ValueError(
                 "PMGNSConfig(sparse_mp=True) needs a sparse batch with "
                 "'edges' and 'edge_mask' — build it via "
                 "collate(samples, sparse=True)")
+        mask_mp = mask
         adj, edges, edge_mask = None, batch["edges"], batch["edge_mask"]
     else:
         if "adj" not in batch:
@@ -340,16 +412,22 @@ def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
                 "PMGNSConfig(sparse_mp=False) needs a dense batch with "
                 "'adj' — build it via collate(samples) or set "
                 "sparse_mp=True for edge-list batches")
+        mask_mp = mask
         adj, edges, edge_mask = batch["adj"], None, None
     h = x
     for i in range(cfg.n_gnn_blocks):
-        h = layer(p["gnn"][f"b{i}"], h, adj, mask, edges=edges,
+        h = layer(p["gnn"][f"b{i}"], h, adj, mask_mp, edges=edges,
                   edge_mask=edge_mask, use_pallas=cfg.use_pallas)
         h = jax.nn.relu(h)
         if train and rng is not None:
             rng, sub = jax.random.split(rng)
             h = nn.dropout(sub, h, cfg.dropout, train)
-    z = _readout(h, mask, cfg.readout)                 # node embedding z
+    if packed:
+        z = _readout_packed(h[0], batch["graph_ids"], mask,
+                            batch["static"].shape[0], cfg.readout,
+                            use_pallas=cfg.use_pallas)
+    else:
+        z = _readout(h, mask, cfg.readout)             # node embedding z
     feats = jnp.concatenate([z, batch["static"]], axis=-1)  # z ⊕ F_s
     y = feats
     for i in range(cfg.n_fc_blocks):
@@ -384,6 +462,61 @@ def make_infer_fn(cfg: PMGNSConfig):
     @jax.jit
     def infer(p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         return pmgns_infer(p, cfg, batch)
+    return infer
+
+
+def packed_staging_layout(cfg: PMGNSConfig, p: int, q: int,
+                          g: int) -> Tuple[int, int, int, int, int]:
+    """Offsets of the flat staged packed buffers — the single source of
+    truth shared by the producer (``PredictionEngine._stage_packed``)
+    and the consumer (:func:`make_staged_packed_infer_fn`), so the two
+    sides can never desynchronize silently.
+
+    Float32 buffer: ``x [P·F] ⊕ mask [P] ⊕ edge_mask [Q] ⊕
+    static [G·D]``; int32 buffer: ``edges [Q·2] ⊕ graph_ids [P]``.
+    Returns ``(o1, o2, o3, f_len, i_len)`` — the three float-buffer
+    split points and both total lengths.
+    """
+    o1 = p * cfg.node_feat_dim
+    o2 = o1 + p
+    o3 = o2 + q
+    return o1, o2, o3, o3 + g * cfg.static_dim, 2 * q + p
+
+
+def make_staged_packed_infer_fn(cfg: PMGNSConfig, p: int, q: int, g: int,
+                                donate: Optional[bool] = None):
+    """Jitted packed infer over two flat staging buffers (one shape).
+
+    The packed serving hot path (direct dict-based packed inference goes
+    through :func:`pmgns_infer` with a ``collate_packed`` batch): the
+    caller stages the whole packed chunk into **one float32 buffer**
+    (``x ⊕ mask ⊕ edge_mask ⊕ static``, flattened) and **one int32
+    buffer** (``edges ⊕ graph_ids``), so a chunk costs two host→device
+    transfers instead of six — on small serving requests the per-array
+    dispatch overhead dominates the transfer time. The jitted function
+    slices the buffers back into the packed batch dict (free at trace
+    time — all offsets are static for the fixed ``(P, Q, G)`` shape) and
+    both buffers are donated on accelerator backends, so staging memory
+    is recycled into activations. Returns ``(params, fbuf, ibuf) →
+    [G, n_targets]`` physical-unit predictions.
+    """
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    feat, sdim = cfg.node_feat_dim, cfg.static_dim
+    o1, o2, o3, _, _ = packed_staging_layout(cfg, p, q, g)
+
+    @partial(jax.jit, donate_argnums=(1, 2) if donate else ())
+    def infer(params: Params, fbuf: jnp.ndarray,
+              ibuf: jnp.ndarray) -> jnp.ndarray:
+        batch = {
+            "x": fbuf[:o1].reshape(p, feat),
+            "mask": fbuf[o1:o2],
+            "edge_mask": fbuf[o2:o3],
+            "static": fbuf[o3:].reshape(g, sdim),
+            "edges": ibuf[:2 * q].reshape(q, 2),
+            "graph_ids": ibuf[2 * q:],
+        }
+        return pmgns_infer(params, cfg, batch)
     return infer
 
 

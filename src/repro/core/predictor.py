@@ -24,7 +24,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batching import collate, sample_from_graph
+from .batching import collate, collate_packed, sample_from_graph
 from .frontends import from_jax, from_json
 from .gnn import PMGNSConfig, decode_targets, pmgns_apply
 from .ir import OpGraph
@@ -102,8 +102,13 @@ class DIPPM:
         """Predict one pre-built :class:`OpGraph` (single-shot path)."""
         import jax.numpy as jnp
         sample = sample_from_graph(g)
-        batch = collate([sample], sparse=self.cfg.sparse_mp)
-        jb = {k: jnp.asarray(v) for k, v in batch.items() if k != "y"}
+        layout = self.cfg.resolved_layout
+        if layout == "packed":
+            batch = collate_packed([sample])
+        else:
+            batch = collate([sample], sparse=layout == "sparse")
+        jb = {k: jnp.asarray(v) for k, v in batch.items()
+              if k not in ("y", "wt")}
         pred = pmgns_apply(self.params, self.cfg, jb, train=False)
         return make_prediction(np.asarray(decode_targets(pred))[0],
                                meta=dict(g.meta))
@@ -144,14 +149,27 @@ class DIPPM:
                                             EngineConfig())
         return self._engine
 
-    def predict_many(self, graphs: Sequence[OpGraph]) -> List[Prediction]:
+    def predict_many(self, graphs: Sequence[OpGraph],
+                     return_stats: bool = False):
         """Predict many graphs at once, preserving input order.
 
         Equivalent to ``[self.predict_graph(g) for g in graphs]`` but
-        bucketed + batched: one compiled apply per padded shape instead of
-        one eager apply per graph. This is the entry point for zoo sweeps.
+        bucketed + batched (or bin-packed, with a
+        ``PMGNSConfig(layout="packed")`` model): one compiled apply per
+        padded shape instead of one eager apply per graph. This is the
+        entry point for zoo sweeps.
+
+        With ``return_stats=True`` returns ``(predictions, stats)``
+        where ``stats`` is a detached
+        :class:`~repro.core.engine.EngineStats` snapshot — cumulative
+        engine counters including ``padding_waste_frac``,
+        ``cache_entries``, and ``recompiles``, so sweeps can report how
+        much device work was padding and how many shapes compiled.
         """
-        return self.engine().predict_graphs(graphs)
+        preds = self.engine().predict_graphs(graphs)
+        if return_stats:
+            return preds, self.engine().stats.snapshot()
+        return preds
 
     def predict_zoo(self, family: str,
                     grid: Iterable[Dict[str, Any]],

@@ -19,7 +19,7 @@ from . import ref as _ref
 from .flash_attention import flash_attention_pallas
 from .sage_spmm import dense_aggregate_pallas, sage_aggregate_pallas
 from .segment_spmm import (edge_softmax_pallas, segment_aggregate_pallas,
-                           segment_scatter_pallas)
+                           segment_readout_pallas, segment_scatter_pallas)
 from .ssd_scan import ssd_scan_pallas
 
 
@@ -82,6 +82,24 @@ def segment_scatter(dst: jax.Array, edge_mask: jax.Array, msgs: jax.Array,
         return segment_scatter_pallas(dst, edge_mask, msgs, n_nodes,
                                       interpret=_interpret())
     return _ref.segment_scatter_ref(dst, edge_mask, msgs, n_nodes)
+
+
+def segment_readout(h: jax.Array, graph_ids: jax.Array,
+                    node_mask: jax.Array, n_graphs: int, *,
+                    kind: str = "mean_max",
+                    impl: Optional[str] = None) -> jax.Array:
+    """Fused segment-mean/max graph readout — see ``segment_spmm``.
+
+    The packed-layout graph pooling: ``h [P, F]`` over one flat node
+    axis + ``graph_ids [P]`` → per-graph ``[G, F]`` (mean) or
+    ``[G, 2F]`` (mean ⊕ max), replacing per-graph masked pooling.
+    """
+    impl = impl or _default_impl()
+    if impl == "pallas":
+        return segment_readout_pallas(h, graph_ids, node_mask, n_graphs,
+                                      kind=kind, interpret=_interpret())
+    return _ref.segment_readout_ref(h, graph_ids, node_mask, n_graphs,
+                                    kind=kind)
 
 
 def edge_softmax(scores: jax.Array, dst: jax.Array, edge_mask: jax.Array,

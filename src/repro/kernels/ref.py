@@ -78,6 +78,35 @@ def segment_degree_ref(edges: jax.Array, edge_mask: jax.Array,
     )(dst, edge_mask)
 
 
+def segment_readout_ref(h: jax.Array, graph_ids: jax.Array,
+                        node_mask: jax.Array, n_graphs: int,
+                        kind: str = "mean_max") -> jax.Array:
+    """Per-graph pooled readout over a packed flat node axis.
+
+    The packed-layout replacement for per-graph masked-mean/max pooling:
+    ``h [P, F]`` holds every graph's nodes on one axis, ``graph_ids [P]``
+    maps each node to its graph, ``node_mask [P]`` zeroes tail padding
+    (padding rows may carry any in-range id). Returns ``[G, F]``
+    (``kind="mean"``) or ``[G, 2F]`` (``"mean_max"``: mean ⊕ max).
+    Graph slots with no real nodes pool to exact zeros, matching the
+    padded layouts' guarded readout.
+    """
+    if kind not in ("mean", "mean_max"):
+        raise ValueError(f"kind must be 'mean' or 'mean_max', got {kind!r}")
+    ids = graph_ids.astype(jnp.int32)
+    w = node_mask.astype(h.dtype)
+    sums = jax.ops.segment_sum(h * w[:, None], ids, num_segments=n_graphs)
+    cnt = jax.ops.segment_sum(w, ids, num_segments=n_graphs)
+    mean = sums / jnp.maximum(cnt, 1.0)[:, None]
+    if kind == "mean":
+        return mean.astype(h.dtype)
+    neg = jnp.finfo(h.dtype).min
+    mx = jax.ops.segment_max(jnp.where(w[:, None] > 0, h, neg), ids,
+                             num_segments=n_graphs)
+    mx = jnp.where(cnt[:, None] > 0, mx, 0.0)
+    return jnp.concatenate([mean, mx], axis=-1).astype(h.dtype)
+
+
 def edge_softmax_ref(scores: jax.Array, dst: jax.Array,
                      edge_mask: jax.Array, n_nodes: int) -> jax.Array:
     """Per-destination softmax over incoming edges, NaN-safe.

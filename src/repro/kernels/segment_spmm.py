@@ -199,6 +199,102 @@ def segment_scatter_pallas(dst: jax.Array, edge_mask: jax.Array,
     return out
 
 
+def _seg_readout_kernel(gid_ref, w_ref, h_ref, sum_ref, cnt_ref, max_ref, *,
+                        bg: int):
+    """Fused per-graph (sum, count, max) over one node tile.
+
+    Runs per (graph-tile, node-tile) with the node axis innermost: the
+    output blocks are revisited across node tiles and accumulated. The
+    one-hot selection matmul is the MXU-native gather (see module
+    docstring); max is a masked broadcast-max on the VPU.
+    """
+    k = pl.program_id(1)
+    gid = gid_ref[0]                                    # [bp] int32
+    w = w_ref[0]                                        # [bp]
+    h = h_ref[0]                                        # [bp, F]
+    bp = gid.shape[0]
+    neg = jnp.finfo(h.dtype).min
+    rows = pl.program_id(0) * bg + jax.lax.broadcasted_iota(
+        jnp.int32, (bg, bp), 0)
+    sel = (gid[None, :] == rows) & (w[None, :] > 0)     # [bg, bp] bool
+    oh = sel.astype(h.dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        sum_ref[0] = jnp.zeros_like(sum_ref[0])
+        cnt_ref[0] = jnp.zeros_like(cnt_ref[0])
+        max_ref[0] = jnp.full_like(max_ref[0], neg)
+
+    sum_ref[0] += jnp.dot(oh, h,
+                          preferred_element_type=jnp.float32
+                          ).astype(sum_ref.dtype)
+    cnt = jnp.sum(oh, axis=1)                           # [bg]
+    cnt_ref[0] += jnp.broadcast_to(cnt[:, None],
+                                   (bg, _DEG_LANES)).astype(cnt_ref.dtype)
+    hb = jnp.where(sel[:, :, None], h[None, :, :], neg)  # [bg, bp, F]
+    max_ref[0] = jnp.maximum(max_ref[0], jnp.max(hb, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("n_graphs", "kind", "bg", "bp",
+                                             "interpret"))
+def segment_readout_pallas(h: jax.Array, graph_ids: jax.Array,
+                           node_mask: jax.Array, n_graphs: int, *,
+                           kind: str = "mean_max", bg: int = 8,
+                           bp: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Fused segment-mean/max graph readout over a packed flat node axis.
+
+    h: [P, F]; graph_ids: [P] int32; node_mask: [P]. One pass computes
+    per-graph sum, node count, and masked max; returns ``[G, F]``
+    (``kind="mean"``) or ``[G, 2F]`` (mean ⊕ max). Graphs with no real
+    nodes read out exact zeros. This replaces the padded layouts'
+    per-graph masked-mean/max pooling without ever un-flattening the
+    node axis.
+    """
+    if kind not in ("mean", "mean_max"):
+        raise ValueError(f"kind must be 'mean' or 'mean_max', got {kind!r}")
+    P, F = h.shape
+    bg = min(bg, max(n_graphs, 1))
+    bp = min(bp, max(P, 1))
+    pg = (-n_graphs) % bg
+    pp = (-P) % bp
+    gid = graph_ids.astype(jnp.int32)
+    w = node_mask.astype(h.dtype)
+    if pp:
+        h = jnp.pad(h, ((0, pp), (0, 0)))
+        gid = jnp.pad(gid, (0, pp))                     # id 0, masked out
+        w = jnp.pad(w, (0, pp))
+    Gp, Pp = n_graphs + pg, P + pp
+    # leading dummy batch axis keeps the (1, ...) block style of the
+    # other segment kernels
+    sums, cnt, mx = pl.pallas_call(
+        functools.partial(_seg_readout_kernel, bg=bg),
+        grid=(Gp // bg, Pp // bp),
+        in_specs=[
+            pl.BlockSpec((1, bp), lambda i, k: (0, k)),
+            pl.BlockSpec((1, bp), lambda i, k: (0, k)),
+            pl.BlockSpec((1, bp, F), lambda i, k: (0, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bg, F), lambda i, k: (0, i, 0)),
+            pl.BlockSpec((1, bg, _DEG_LANES), lambda i, k: (0, i, 0)),
+            pl.BlockSpec((1, bg, F), lambda i, k: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Gp, F), h.dtype),
+            jax.ShapeDtypeStruct((1, Gp, _DEG_LANES), h.dtype),
+            jax.ShapeDtypeStruct((1, Gp, F), h.dtype),
+        ],
+        interpret=interpret,
+    )(gid[None], w[None], h[None])
+    sums, cnt, mx = sums[0, :n_graphs], cnt[0, :n_graphs, :1], mx[0, :n_graphs]
+    mean = sums / jnp.maximum(cnt, 1.0)
+    if kind == "mean":
+        return mean.astype(h.dtype)
+    mx = jnp.where(cnt > 0, mx, 0.0)
+    return jnp.concatenate([mean, mx], axis=-1).astype(h.dtype)
+
+
 def _softmax_stats_kernel(s_ref, dst_ref, em_ref, m_ref, d_ref, *,
                           bn: int):
     """Online (max, denom) per destination node, heads on sublanes.

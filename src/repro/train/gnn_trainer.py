@@ -15,6 +15,14 @@ The trainer is built in four layers:
    (``edges [S, B, E, 2]`` + ``edge_mask``) and the model aggregates by
    segment gather/scatter — same schedule, same numerics (within float
    tolerance), O(N·F + E) device memory per batch row instead of O(N²).
+   ``PMGNSConfig(layout="packed")`` goes further: each step's rows are
+   flattened onto one packed node axis (``x [S, P, F]`` +
+   ``graph_ids``, globally-offset edges, per-graph ``static``/``y``/
+   ``wt``) under the *identical* batch schedule, cutting the padded row
+   volume roughly in half while matching the sparse loss trajectory to
+   float tolerance (dropout off — packed activation shapes draw a
+   different dropout stream). Packed training is single-device:
+   ``data_parallel`` needs the sparse layout's batch axis.
 2. **Step fusion** — each epoch is stacked into per-bucket
    ``[num_steps, B, ...]`` device segments
    (:func:`~repro.core.batching.stack_epoch_segments`) and driven by
@@ -49,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.batching import (GraphSample, batches_by_bucket, collate,
+                             collate_packed, next_pow2, pack_graphs,
                              stack_epoch_segments)
 from ..core.gnn import (PMGNSConfig, decode_targets, encode_targets, huber,
                         mape, pmgns_apply, pmgns_init)
@@ -121,31 +130,60 @@ def _fold_stats(params, cfg: PMGNSConfig, mean, std):
 
 @partial(jax.jit, static_argnames=("cfg", "delta"))
 def _eval_batch(params, cfg: PMGNSConfig, batch, delta: float = 1.0):
+    """Per-graph (huber-loss, APE) rows — aggregated host-side so packed
+    batches can drop their padded graph slots before averaging."""
     pred = pmgns_apply(params, cfg, batch, train=False)
     target = encode_targets(batch["y"])
-    loss = jnp.mean(huber(pred, target, delta))
+    loss_rows = jnp.mean(huber(pred, target, delta), axis=-1)   # [B]
     pred_phys = decode_targets(pred)
     # per-target absolute percentage errors, summed (averaged outside)
     denom = jnp.maximum(jnp.abs(batch["y"]), 1e-6)
     ape = jnp.abs(pred_phys - batch["y"]) / denom       # [B, 3]
-    return loss, ape
+    return loss_rows, ape
+
+
+def _eval_packed_batches(samples: Sequence[GraphSample],
+                         batch_size: int) -> List[Dict[str, np.ndarray]]:
+    """Packed eval bins at one shared budget triple (order-free metrics).
+
+    Budgets are resolved once and passed through to both the packer and
+    the collate, so every full bin lands on the same compiled
+    ``_eval_batch`` shape instead of a tight per-bin signature.
+    """
+    from ..core.batching import resolve_packed_budgets
+    total = sum(s.n_nodes for s in samples)
+    nb, eb, gb = resolve_packed_budgets(
+        min(next_pow2(batch_size * 256), next_pow2(max(total, 1))))
+    bins = pack_graphs(samples, nb, eb, gb)
+    return [collate_packed([samples[j] for j in idx], nb, eb, gb)
+            for idx in bins]
 
 
 def evaluate(params, cfg: PMGNSConfig, samples: Sequence[GraphSample],
              batch_size: int = 32) -> Dict[str, float]:
     """Loss + overall and per-target MAPE over a sample set.
 
-    Batch layout follows ``cfg.sparse_mp`` — with it set, eval batches
-    carry padded edge lists and never densify the adjacency.
+    Batch layout follows ``cfg.resolved_layout`` — sparse eval batches
+    carry padded edge lists and never densify the adjacency; packed eval
+    bin-packs mixed-size graphs onto one flat node axis and masks the
+    padded graph slots out of every metric.
     """
-    batches = batches_by_bucket(list(samples), batch_size,
-                                sparse=cfg.sparse_mp)
+    samples = list(samples)
+    layout = cfg.resolved_layout
+    if layout == "packed":
+        batches = _eval_packed_batches(samples, batch_size)
+    else:
+        batches = batches_by_bucket(samples, batch_size,
+                                    sparse=layout == "sparse")
     losses, apes = [], []
     for b in batches:
+        wt = b.pop("wt", None)
         jb = {k: jnp.asarray(v) for k, v in b.items()}
-        loss, ape = _eval_batch(params, cfg, jb)
-        losses.append(float(loss) * ape.shape[0])
-        apes.append(np.asarray(ape))
+        loss_rows, ape = _eval_batch(params, cfg, jb)
+        real = (np.asarray(wt) > 0 if wt is not None
+                else np.ones(ape.shape[0], bool))
+        losses.append(float(np.asarray(loss_rows)[real].sum()))
+        apes.append(np.asarray(ape)[real])
     if not apes:
         return {"loss": float("nan"), "mape": float("nan")}
     ape_all = np.concatenate(apes, axis=0)
@@ -279,6 +317,12 @@ def train_pmgns(
     if cfg.mode not in ("scan", "eager"):
         raise ValueError(f"TrainConfig.mode must be 'scan' or 'eager', "
                          f"got {cfg.mode!r}")
+    layout = model_cfg.resolved_layout
+    if cfg.data_parallel and layout == "packed":
+        raise ValueError(
+            "data_parallel=True shards the scan's batch axis, but packed "
+            "segments have no batch axis to shard (one flat node axis per "
+            "step) — train data-parallel with layout='sparse' instead")
     train_samples = list(train_samples)
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
@@ -338,8 +382,7 @@ def train_pmgns(
         t0 = time.time()
         segments = stack_epoch_segments(
             train_samples, cfg.batch_size, rng=_epoch_rng(cfg.seed, epoch),
-            batch_multiple=ndev, max_steps=cfg.scan_steps,
-            sparse=model_cfg.sparse_mp)
+            batch_multiple=ndev, max_steps=cfg.scan_steps, layout=layout)
         total_steps = sum(int(s["wt"].shape[0]) for s in segments)
         keys = _epoch_keys(cfg.seed, epoch, total_steps)
         wl_sum, wn_sum, k0 = 0.0, 0.0, 0

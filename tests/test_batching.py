@@ -1,10 +1,14 @@
 """Sparse edge-list batch format: buckets, packing, envelope, segments."""
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
-from repro.core.batching import (MIN_EDGE_BUCKET, collate, dense_adj,
-                                 edge_bucket_for, max_batch_for_bucket,
-                                 pack_edges, stack_epoch_segments)
+from repro.core.batching import (MIN_EDGE_BUCKET, collate, collate_packed,
+                                 dense_adj, edge_bucket_for, edge_floor,
+                                 max_batch_for_bucket, pack_edges,
+                                 pack_graphs, packed_shape, pad_sample,
+                                 stack_epoch_segments)
 from repro.dataset.builder import synthetic_samples
 
 
@@ -92,3 +96,142 @@ def test_pack_edges_rejects_overflow():
     samples = synthetic_samples(1, seed=3)
     with pytest.raises(ValueError, match="edge bucket"):
         pack_edges(samples, e_pad=1)
+
+
+# ---- shared edge-density floor ---------------------------------------------
+
+def test_edge_floor_is_shared_single_source():
+    """Engine and trainer derive per-node-bucket edge floors from ONE
+    helper; the engine's method is a pure delegate."""
+    from repro.core.engine import PredictionEngine
+    for n in (32, 64, 256, 1024):
+        assert edge_floor(n) == edge_bucket_for(2 * n)
+        assert PredictionEngine._edge_floor(n) == edge_floor(n)
+    # trainer segments apply the floor: sparse E never below it
+    samples = synthetic_samples(9, n_min=4, n_max=20, seed=4)   # bucket 32
+    seg = stack_epoch_segments(samples, batch_size=4, sparse=True)[0]
+    assert seg["edges"].shape[2] >= edge_floor(32)
+
+
+# ---- memoized dense adjacency ----------------------------------------------
+
+def test_adj_is_memoized_per_sample():
+    """Two accesses return the SAME buffer (no fresh [N, N] per touch)."""
+    s = synthetic_samples(1, seed=5)[0]
+    a1 = s.adj
+    a2 = s.adj
+    assert a1 is a2
+    np.testing.assert_array_equal(a1, dense_adj(s.edges, s.x.shape[0]))
+
+
+# ---- packed block-diagonal layout ------------------------------------------
+
+def _empty_graph_sample():
+    """A labeled sample with nodes but zero edges (E=0)."""
+    return pad_sample(np.random.default_rng(0).standard_normal(
+        (5, 32)).astype(np.float32),
+        np.zeros((0, 2), np.int32), np.zeros(5, np.float32),
+        y=np.ones(3, np.float32))
+
+
+def _single_node_sample():
+    return pad_sample(np.ones((1, 32), np.float32),
+                      np.zeros((0, 2), np.int32), np.zeros(5, np.float32),
+                      y=np.ones(3, np.float32))
+
+
+def test_pack_graphs_partitions_all_indices():
+    samples = synthetic_samples(23, n_min=4, n_max=200, seed=6)
+    bins = pack_graphs(samples, node_budget=256)
+    seen = sorted(i for b in bins for i in b)
+    assert seen == list(range(len(samples)))
+    for b in bins:
+        assert sum(samples[i].n_nodes for i in b) <= 256 or len(b) == 1
+
+
+def test_pack_graphs_respects_all_budgets():
+    samples = synthetic_samples(30, n_min=8, n_max=30, seed=7)
+    bins = pack_graphs(samples, node_budget=4096, edge_budget=8192,
+                       graph_budget=4)
+    assert all(len(b) <= 4 for b in bins)
+    bins_e = pack_graphs(samples, node_budget=4096, edge_budget=32)
+    for b in bins_e:
+        assert (sum(samples[i].n_edges for i in b) <= 32 or len(b) == 1)
+
+
+def test_collate_packed_layout_and_offsets():
+    """Globally-offset edges densify back to each sample's adjacency."""
+    samples = synthetic_samples(5, n_min=4, n_max=40, seed=8)
+    b = collate_packed(samples)
+    p = b["x"].shape[0]
+    assert b["graph_ids"].shape == (p,) and b["mask"].shape == (p,)
+    assert b["wt"].sum() == len(samples)
+    off = 0
+    for gi, s in enumerate(samples):
+        n = s.n_nodes
+        np.testing.assert_array_equal(b["x"][off:off + n], s.x[:n])
+        assert (b["graph_ids"][off:off + n] == gi).all()
+        live = b["edges"][b["edge_mask"] > 0]
+        mine = live[(live[:, 0] >= off) & (live[:, 0] < off + n)] - off
+        np.testing.assert_array_equal(
+            dense_adj(mine, s.x.shape[0]), s.adj)
+        off += n
+    assert (b["mask"][off:] == 0).all()
+
+
+def test_packed_edge_cases_empty_and_single_node():
+    """E=0 graphs and 1-node graphs pack and predict finitely."""
+    import jax
+    from repro.core import PMGNSConfig, PredictionEngine, pmgns_init
+    samples = [_empty_graph_sample(), _single_node_sample()] \
+        + synthetic_samples(3, seed=9)
+    bins = pack_graphs(samples, node_budget=512)
+    assert sorted(i for b in bins for i in b) == list(range(5))
+    cfg = PMGNSConfig(hidden=16, layout="packed")
+    eng = PredictionEngine(pmgns_init(jax.random.PRNGKey(0), cfg), cfg)
+    out = eng.predict_samples(samples)
+    assert np.isfinite(out).all()
+
+
+def test_packed_budget_boundary_graph():
+    """A graph landing exactly on the node budget fills one bin alone;
+    one node more forces escalation, never truncation."""
+    rng = np.random.default_rng(10)
+    exact = pad_sample(rng.standard_normal((32, 32)).astype(np.float32),
+                       np.asarray([(i, i + 1) for i in range(31)], np.int32),
+                       np.zeros(5, np.float32), y=np.ones(3, np.float32))
+    assert exact.n_nodes == 32
+    small = synthetic_samples(1, n_min=4, n_max=5, seed=11)
+    bins = pack_graphs([exact] + small, node_budget=32)
+    assert [0] in bins                      # boundary graph fills its bin
+    p, _, _ = packed_shape([exact], node_budget=32)
+    assert p == 32
+    over = pad_sample(rng.standard_normal((33, 32)).astype(np.float32),
+                      np.zeros((0, 2), np.int32), np.zeros(5, np.float32))
+    p2, _, _ = packed_shape([over], node_budget=32)
+    assert p2 >= 33                         # escalated, not truncated
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(min_value=0, max_value=11), min_size=1,
+                max_size=12, unique=True),
+       st.sampled_from([128, 512, 4096]))
+def test_pack_graphs_round_trips_predictions(order, node_budget):
+    """Property: for ANY packing order/subset and budget, unpacked
+    per-graph engine predictions match per-sample predict_graph."""
+    import jax
+    from repro.core import (EngineConfig, PMGNSConfig, PredictionEngine,
+                            pmgns_init)
+    all_samples = synthetic_samples(12, n_min=4, n_max=60, seed=12)
+    samples = [all_samples[i] for i in order]
+    cfg = PMGNSConfig(hidden=16, layout="packed")
+    params = pmgns_init(jax.random.PRNGKey(0), cfg)
+    eng = PredictionEngine(params, cfg,
+                           EngineConfig(node_budget=node_budget))
+    got = eng.predict_samples(samples)
+    # reference: each sample alone through the packed single path
+    solo = PredictionEngine(params, cfg,
+                            EngineConfig(node_budget=node_budget))
+    for i, s in enumerate(samples):
+        ref = solo.predict_samples([s])[0]
+        np.testing.assert_allclose(got[i], ref, atol=1e-4, rtol=1e-4)

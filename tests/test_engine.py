@@ -203,3 +203,69 @@ def test_sparse_warmup_precompiles(dippm):
     cfg_s = PMGNSConfig(hidden=32, sparse_mp=True)
     eng = PredictionEngine(dippm.params, cfg_s)
     assert eng.warmup(node_buckets=(32,)) == 1
+
+
+# ---- packed block-diagonal engine ------------------------------------------
+
+def test_packed_engine_matches_dense(dippm):
+    """Packed engine: same predictions, same order, one flat node axis."""
+    cfg_p = PMGNSConfig(hidden=32, layout="packed")
+    eng_p = PredictionEngine(dippm.params, cfg_p)
+    sizes = [3, 40, 100, 7, 60, 90, 12]
+    graphs = [_graph(n, seed=i) for i, n in enumerate(sizes)]
+    dense_out = dippm.predict_many(graphs)
+    packed_out = eng_p.predict_graphs(graphs)
+    for a, b in zip(dense_out, packed_out):
+        np.testing.assert_allclose(
+            [b.latency_ms, b.energy_j, b.memory_mb],
+            [a.latency_ms, a.energy_j, a.memory_mb], atol=1e-5, rtol=1e-5)
+        assert b.meta == a.meta
+
+
+def test_packed_engine_single_compiled_shape(dippm):
+    """Mixed node sizes that cost the bucketed engine several compiled
+    shapes all land on ONE packed budget shape."""
+    cfg_p = PMGNSConfig(hidden=32, layout="packed")
+    eng = PredictionEngine(dippm.params, cfg_p)
+    sizes = [3, 40, 100, 7, 60, 90, 12, 31, 33, 200, 500]   # 5 buckets
+    eng.predict_graphs([_graph(n, seed=i) for i, n in enumerate(sizes)])
+    assert eng.stats.cache_entries == 1
+    assert eng.stats.recompiles == 1
+    eng.predict_graphs([_graph(55, seed=77)])   # small request → lower rung
+    assert eng.stats.cache_entries == 2
+
+
+def test_packed_warmup_precompiles(dippm):
+    cfg_p = PMGNSConfig(hidden=32, layout="packed")
+    eng = PredictionEngine(dippm.params, cfg_p)
+    assert eng.warmup() == 1
+    assert eng.stats.cache_entries == 1
+
+
+def test_engine_stats_padding_waste(dippm):
+    """Packed waste must undercut the bucketed engine's on mixed sizes,
+    and both expose the counters the benchmark prints."""
+    cfg_p = PMGNSConfig(hidden=32, layout="packed")
+    eng_p = PredictionEngine(dippm.params, cfg_p,
+                             EngineConfig(node_budget=512))
+    eng_d = PredictionEngine(dippm.params, dippm.cfg)
+    graphs = [_graph(n, seed=i)
+              for i, n in enumerate([33, 33, 70, 70, 140, 9, 9, 9])]
+    eng_p.predict_graphs(graphs)
+    eng_d.predict_graphs(graphs)
+    assert 0.0 < eng_p.stats.padding_waste_frac < 1.0
+    assert eng_p.stats.padding_waste_frac < eng_d.stats.padding_waste_frac
+    assert eng_p.stats.node_slots_real == sum([33, 33, 70, 70, 140, 9, 9, 9])
+
+
+def test_predict_many_return_stats(dippm):
+    graphs = [_graph(10, seed=i) for i in range(3)]
+    preds, stats = dippm.predict_many(graphs, return_stats=True)
+    assert len(preds) == 3
+    assert stats.graphs_predicted >= 3
+    assert stats.cache_entries >= 1
+    assert 0.0 <= stats.padding_waste_frac < 1.0
+    # the snapshot is detached: later traffic doesn't mutate it
+    before = stats.graphs_predicted
+    dippm.predict_many(graphs)
+    assert stats.graphs_predicted == before

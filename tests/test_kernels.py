@@ -15,6 +15,7 @@ from repro.kernels.sage_spmm import (dense_aggregate_pallas,
                                      sage_aggregate_pallas)
 from repro.kernels.segment_spmm import (edge_softmax_pallas,
                                         segment_aggregate_pallas,
+                                        segment_readout_pallas,
                                         segment_scatter_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -135,6 +136,71 @@ def test_segment_isolated_nodes_zero():
     for mode in ("sum", "mean"):
         out = segment_aggregate_pallas(edges, emask, h, mode=mode)
         np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# segment_spmm: fused segment-mean/max graph readout (packed layout)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["mean", "mean_max"])
+@pytest.mark.parametrize("p,f,g", [
+    (33, 17, 3),              # nothing tile-aligned
+    (300, 32, 7),             # multiple node tiles
+    (4096, 64, 256),          # the default engine budget shape
+])
+def test_segment_readout_matches_ref(kind, p, f, g):
+    rng = np.random.default_rng(p)
+    gid = np.sort(rng.integers(0, g, p)).astype(np.int32)
+    w = (rng.random(p) < 0.8).astype(np.float32)
+    h = rng.standard_normal((p, f)).astype(np.float32)
+    out = segment_readout_pallas(jnp.asarray(h), jnp.asarray(gid),
+                                 jnp.asarray(w), g, kind=kind)
+    exp = ref.segment_readout_ref(jnp.asarray(h), jnp.asarray(gid),
+                                  jnp.asarray(w), g, kind=kind)
+    assert out.shape == (g, f if kind == "mean" else 2 * f)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_segment_readout_empty_graph_slots_are_zero():
+    """Padded graph slots (no real nodes) read out exact zeros — the
+    guard that keeps them wt-maskable, never -inf/NaN."""
+    rng = np.random.default_rng(1)
+    p, f, g = 64, 8, 5
+    gid = np.clip(np.sort(rng.integers(0, 3, p)), 0, 2).astype(np.int32)
+    w = np.ones(p, np.float32)
+    w[gid == 1] = 0.0                     # graph 1: all nodes masked
+    h = rng.standard_normal((p, f)).astype(np.float32)
+    for fn in (segment_readout_pallas, ref.segment_readout_ref):
+        out = np.asarray(fn(jnp.asarray(h), jnp.asarray(gid),
+                            jnp.asarray(w), g))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out[1], 0.0, atol=0)   # masked graph
+        np.testing.assert_allclose(out[3:], 0.0, atol=0)  # empty slots
+
+
+def test_segment_readout_matches_masked_pooling():
+    """The packed readout equals the padded layouts' per-graph masked
+    mean/max pooling — the cross-layout contract pmgns_apply relies on."""
+    rng = np.random.default_rng(2)
+    n, f, b = 24, 16, 3
+    h_b = rng.standard_normal((b, n, f)).astype(np.float32)
+    mask_b = np.zeros((b, n), np.float32)
+    counts = [24, 10, 1]
+    for i, c in enumerate(counts):
+        mask_b[i, :c] = 1.0
+    # flatten the real rows
+    h_flat = np.concatenate([h_b[i, :c] for i, c in enumerate(counts)])
+    gid = np.concatenate([np.full(c, i, np.int32)
+                          for i, c in enumerate(counts)])
+    w = np.ones(len(gid), np.float32)
+    from repro.core.gnn import _readout
+    exp = np.asarray(_readout(jnp.asarray(h_b), jnp.asarray(mask_b),
+                              "mean_max"))
+    for fn in (segment_readout_pallas, ref.segment_readout_ref):
+        out = np.asarray(fn(jnp.asarray(h_flat), jnp.asarray(gid),
+                            jnp.asarray(w), b))
+        np.testing.assert_allclose(out, exp, atol=1e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------

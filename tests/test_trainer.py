@@ -252,6 +252,73 @@ def test_sparse_data_parallel_trains():
                for l in jax.tree_util.tree_leaves(params))
 
 
+def test_packed_scan_epoch_matches_sparse():
+    """Packed [S, P, ...] segments keep the padded-sparse schedule, so a
+    full scan epoch reproduces its loss trajectory and parameters.
+    Dropout off: packed activations have different shapes, so train-mode
+    dropout masks are drawn differently by construction."""
+    samples = _synth_samples(24, seed=15)
+    cfg_sparse = dataclasses.replace(CFG, sparse_mp=True, dropout=0.0)
+    cfg_packed = dataclasses.replace(CFG, layout="packed", dropout=0.0)
+    common = dict(epochs=2, batch_size=8, lr=3e-3, seed=0)
+    p_s, h_s = train_pmgns(cfg_sparse, samples, (),
+                           TrainConfig(mode="scan", **common))
+    p_p, h_p = train_pmgns(cfg_packed, samples, (),
+                           TrainConfig(mode="scan", **common))
+    for hs, hp in zip(h_s, h_p):
+        assert hs["steps"] == hp["steps"]
+        np.testing.assert_allclose(hp["train_loss"], hs["train_loss"],
+                                   rtol=1e-5)
+    for ls, lp in zip(jax.tree_util.tree_leaves(p_s),
+                      jax.tree_util.tree_leaves(p_p)):
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(ls),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_packed_segments_layout():
+    """Packed segments: flat [S, P, ...] arrays, per-step graph slots,
+    every sample exactly once."""
+    samples = _synth_samples(21, n_min=4, n_max=60, seed=16)
+    segs = stack_epoch_segments(samples, batch_size=4, max_steps=2,
+                                layout="packed")
+    assert sum(float(s["wt"].sum()) for s in segs) == len(samples)
+    for s in segs:
+        S, P = s["x"].shape[:2]
+        assert s["graph_ids"].shape == (S, P)
+        assert s["mask"].shape == (S, P)
+        assert s["edges"].ndim == 3 and s["edges"].shape[2] == 2
+        assert s["static"].shape[:2] == s["wt"].shape
+        # graph ids of real nodes stay inside the step's graph slots
+        for si in range(S):
+            live = s["graph_ids"][si][s["mask"][si] > 0]
+            if live.size:
+                assert live.max() < s["wt"].shape[1]
+
+
+def test_packed_eval_and_predict_batch():
+    samples = _synth_samples(10, seed=17)
+    cfg_packed = dataclasses.replace(CFG, layout="packed")
+    params = pmgns_init(jax.random.PRNGKey(0), CFG)
+    preds_d = predict_batch(params, CFG, samples)
+    preds_p = predict_batch(params, cfg_packed, samples)
+    np.testing.assert_allclose(preds_p, preds_d, atol=1e-4, rtol=1e-4)
+    from repro.train.gnn_trainer import evaluate
+    ev_d = evaluate(params, CFG, samples)
+    ev_p = evaluate(params, cfg_packed, samples)
+    np.testing.assert_allclose(ev_p["loss"], ev_d["loss"], rtol=1e-5)
+    np.testing.assert_allclose(ev_p["mape"], ev_d["mape"], rtol=1e-4)
+    assert ev_p["n"] == ev_d["n"]
+
+
+def test_packed_data_parallel_raises():
+    """The packed flat node axis cannot shard over the batch axis."""
+    samples = _synth_samples(8, seed=18)
+    cfg_packed = dataclasses.replace(CFG, layout="packed")
+    with pytest.raises(ValueError, match="packed"):
+        train_pmgns(cfg_packed, samples, (),
+                    TrainConfig(epochs=1, data_parallel=True))
+
+
 def test_sparse_eval_and_predict_batch():
     samples = _synth_samples(10, seed=14)
     cfg_sparse = dataclasses.replace(CFG, sparse_mp=True)
