@@ -25,8 +25,9 @@ def main() -> None:
     epochs = args.epochs or (60 if args.full else 25)
 
     from . import (engine_throughput, fig3_mig_memory, fig4_scatter,
-                   microbench, packed_batching, roofline_report, sparse_mp,
-                   table2_dataset, table4_gnn, table5_mig, train_throughput)
+                   microbench, packed_batching, roofline_report,
+                   serving_latency, sparse_mp, table2_dataset, table4_gnn,
+                   table5_mig, train_throughput)
 
     jobs = {
         "microbench": lambda: microbench.run(),
@@ -34,6 +35,7 @@ def main() -> None:
         "train": lambda: train_throughput.run(),
         "sparse_mp": lambda: sparse_mp.run(),
         "packed_batching": lambda: packed_batching.run(),
+        "serving_latency": lambda: serving_latency.run(),
         "table2": lambda: table2_dataset.run(n_graphs=n_graphs),
         "table4": lambda: table4_gnn.run(n_graphs=n_graphs, epochs=epochs),
         "table5": lambda: table5_mig.run(n_graphs=n_graphs,

@@ -23,7 +23,7 @@ def main():
     ap.add_argument("--hidden", type=int, default=512)
     ap.add_argument("--lr", type=float, default=2.754e-5 * 400)
     ap.add_argument("--variant", default="graphsage")
-    ap.add_argument("--out", default="artifacts/dippm.pkl")
+    ap.add_argument("--out", default="artifacts/dippm.npz")
     ap.add_argument("--save-dataset", default=None)
     ap.add_argument("--checkpoint-dir", default=None,
                     help="checkpoint every epoch here and resume from it")

@@ -9,8 +9,9 @@ from .batching import (GraphSample, collate, collate_packed,
                        batches_by_bucket, sample_from_graph, pad_sample,
                        dense_adj, stack_epoch_segments, group_by_bucket,
                        max_batch_for_bucket, next_pow2, bucket_for,
-                       pack_graphs, packed_rung, packed_shape,
-                       resolve_packed_budgets, edge_bucket_for, edge_floor,
+                       pack_graphs, packed_rung, packed_rung_ladder,
+                       packed_shape, resolve_packed_budgets,
+                       edge_bucket_for, edge_floor,
                        DEFAULT_BUCKETS, DEFAULT_NODE_BUDGET)
 from .gnn import (PMGNSConfig, pmgns_init, pmgns_apply, pmgns_infer,
                   make_infer_fn, make_staged_packed_infer_fn,

@@ -405,6 +405,41 @@ def packed_rung(p: int, edge_budget: int,
     return q, g
 
 
+def packed_rung_ladder(
+    node_budget: Optional[int] = None,
+    edge_budget: Optional[int] = None,
+    graph_budget: Optional[int] = None,
+) -> List[Tuple[int, int, int]]:
+    """The typical-density ``(P, Q, G)`` rung ladder of
+    :func:`packed_shape`.
+
+    ``P`` starts at the ``budget // 16`` floor and doubles up to the
+    budget (≤ 5 rungs at the defaults), each with its typical-density
+    :func:`packed_rung` companions — the shapes bins of ordinary DAG
+    density and ordinary graph count land on. Serving warmup
+    (``repro.serve.PredictionService.warmup`` /
+    ``PredictionEngine.warmup(rungs="all")``) precompiles exactly this
+    set, so steady traffic at any request *size* runs compile-free.
+    Bins that escalate an axis past its rung — denser-than-typical edge
+    content, or more graphs than ``P // 16`` (many very small graphs in
+    one bin), or an oversize lone graph — use the budget/pow2 escape
+    shapes instead and still pay a one-time compile on first sight;
+    those shapes are workload-dependent, so warmup does not guess them.
+    """
+    p_cap, q_cap, g_cap = resolve_packed_budgets(node_budget, edge_budget,
+                                                 graph_budget)
+    ps = [max(1, p_cap // 16)]
+    t = next_pow2(ps[0])
+    if t == ps[0]:
+        t *= 2
+    while t < p_cap:
+        ps.append(t)
+        t *= 2
+    if ps[-1] != p_cap:
+        ps.append(p_cap)
+    return [(p, *packed_rung(p, q_cap, g_cap)) for p in ps]
+
+
 def packed_shape(samples: Sequence[GraphSample],
                  node_budget: Optional[int] = None,
                  edge_budget: Optional[int] = None,

@@ -36,6 +36,7 @@ pre-compile with :meth:`PredictionEngine.warmup`.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,8 +45,8 @@ from .batching import (DEFAULT_BUCKETS, DEFAULT_NODE_BUDGET, GraphSample,
                        collate_packed, dense_adj, edge_bucket_for,
                        edge_floor, group_by_bucket, max_batch_for_bucket,
                        next_pow2, pack_edges, pack_graphs, packed_rung,
-                       packed_shape, resolve_packed_budgets,
-                       sample_from_graph)
+                       packed_rung_ladder, packed_shape,
+                       resolve_packed_budgets, sample_from_graph)
 from .gnn import (PMGNSConfig, make_infer_fn, make_staged_packed_infer_fn,
                   packed_staging_layout)
 from .ir import OpGraph
@@ -129,8 +130,11 @@ class PredictionEngine:
     """Order-preserving batched inference over many ``OpGraph``s.
 
     Holds trained PMGNS ``params`` + ``cfg`` and a compiled-function cache
-    keyed on ``(node_bucket, batch_bucket)``. Thread-compatible for reads
-    after :meth:`warmup`; compilation itself is single-threaded.
+    keyed on ``(node_bucket, batch_bucket)``. :meth:`run_bin` — the
+    single device-dispatch entry shared by :meth:`predict_samples` and
+    the serving micro-batcher (``repro.serve``) — is **thread-safe**: an
+    internal lock serializes staging + stats + the compiled-shape
+    bookkeeping, so any number of threads may feed one engine.
     """
 
     def __init__(self, params, cfg: PMGNSConfig,
@@ -168,6 +172,10 @@ class PredictionEngine:
         self._infer = make_infer_fn(cfg)
         self._staged: dict = {}
         self._compiled_shapes: set = set()
+        #: Serializes run_bin (staging buffers, stats counters, compiled-
+        #: shape bookkeeping) so concurrent submitters — the serving
+        #: micro-batcher, parallel sweeps — can share one engine.
+        self._lock = threading.RLock()
 
     # -- compiled-fn cache ---------------------------------------------------
     def _track_shape(self, key: Tuple) -> None:
@@ -193,7 +201,8 @@ class PredictionEngine:
         return self._staged[key]
 
     def warmup(self, node_buckets: Optional[Sequence[int]] = None,
-               batch_buckets: Optional[Sequence[int]] = None) -> int:
+               batch_buckets: Optional[Sequence[int]] = None,
+               rungs=None) -> int:
         """Pre-compile for the given shape grid (serving cold-start).
 
         Defaults to every node bucket × the full per-bucket batch cap —
@@ -201,47 +210,68 @@ class PredictionEngine:
         full bins hit (``P`` = the node budget with its typical-density
         edge/graph rungs — the shape a steady stream of full bins runs;
         part-full bins on lower rungs still compile on first sight).
-        Returns the number of functions compiled.
+        Packed engines additionally take ``rungs``: ``"all"``
+        precompiles the whole typical-density ladder
+        (:func:`repro.core.batching.packed_rung_ladder` — steady
+        traffic at any request *size* then runs compile-free; bins that
+        escalate past a rung on edge density or graph count still
+        compile on first sight), or a sequence of ``P`` values selects
+        specific rungs. Returns the number of functions compiled.
         """
         import jax.numpy as jnp
-        before = self.stats.cache_misses
         sdim = self.cfg.static_dim
         if self.packed:
             if node_buckets or batch_buckets:
                 raise ValueError(
                     "packed-layout engines have no node/batch buckets to "
                     "warm — shapes follow the (node_budget, edge_budget, "
-                    "graph_budget) rung ladder; call warmup() with no "
-                    "arguments")
+                    "graph_budget) rung ladder; use warmup(rungs=...)")
             nb, eb, gb = self._budgets
-            # the rung packed_shape assigns a full typical-density bin
-            p = nb
-            q, g = packed_rung(p, eb, gb)
-            fn = self._packed_fn(p, q, g)
-            _, _, _, f_len, i_len = packed_staging_layout(self.cfg, p, q, g)
-            fn(self.params, jnp.zeros((f_len,)),
-               jnp.zeros((i_len,), jnp.int32)).block_until_ready()
-            return self.stats.cache_misses - before
+            if rungs is None:
+                shapes = [(nb, *packed_rung(nb, eb, gb))]
+            elif rungs == "all":
+                shapes = packed_rung_ladder(nb, eb, gb)
+            else:
+                shapes = [(int(p), *packed_rung(int(p), eb, gb))
+                          for p in rungs]
+            # before/compile/after all under the lock: a concurrent
+            # run_bin compiling its own shape mid-warmup must not leak
+            # into the returned count
+            with self._lock:
+                before = self.stats.cache_misses
+                for p, q, g in shapes:
+                    fn = self._packed_fn(p, q, g)
+                    _, _, _, f_len, i_len = packed_staging_layout(
+                        self.cfg, p, q, g)
+                    fn(self.params, jnp.zeros((f_len,)),
+                       jnp.zeros((i_len,), jnp.int32)).block_until_ready()
+                return self.stats.cache_misses - before
+        if rungs is not None:
+            raise ValueError(
+                "rungs= selects packed budget rungs; bucketed engines "
+                "warm via warmup(node_buckets=..., batch_buckets=...)")
         node_buckets = tuple(node_buckets or self.engine_cfg.buckets)
-        for n in node_buckets:
-            bbs = batch_buckets or (self._batch_cap(n),)
-            for b in bbs:
-                b = next_pow2(int(b))       # predict pads to powers of two
-                batch = {
-                    "x": jnp.zeros((b, n, self.cfg.node_feat_dim)),
-                    "mask": jnp.zeros((b, n)),
-                    "static": jnp.zeros((b, sdim)),
-                }
-                if self.sparse:
-                    e = self._edge_floor(n)
-                    fn = self._infer_fn(n, b, e)
-                    batch["edges"] = jnp.zeros((b, e, 2), jnp.int32)
-                    batch["edge_mask"] = jnp.zeros((b, e))
-                else:
-                    fn = self._infer_fn(n, b)
-                    batch["adj"] = jnp.zeros((b, n, n))
-                fn(self.params, batch).block_until_ready()
-        return self.stats.cache_misses - before
+        with self._lock:
+            before = self.stats.cache_misses
+            for n in node_buckets:
+                bbs = batch_buckets or (self._batch_cap(n),)
+                for b in bbs:
+                    b = next_pow2(int(b))   # predict pads to powers of two
+                    batch = {
+                        "x": jnp.zeros((b, n, self.cfg.node_feat_dim)),
+                        "mask": jnp.zeros((b, n)),
+                        "static": jnp.zeros((b, sdim)),
+                    }
+                    if self.sparse:
+                        e = self._edge_floor(n)
+                        fn = self._infer_fn(n, b, e)
+                        batch["edges"] = jnp.zeros((b, e, 2), jnp.int32)
+                        batch["edge_mask"] = jnp.zeros((b, e))
+                    else:
+                        fn = self._infer_fn(n, b)
+                        batch["adj"] = jnp.zeros((b, n, n))
+                    fn(self.params, batch).block_until_ready()
+            return self.stats.cache_misses - before
 
     @staticmethod
     def _edge_floor(node_bucket: int) -> int:
@@ -345,6 +375,55 @@ class PredictionEngine:
         self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
         return out[:len(chunk)]
 
+    def plan_bins(self, samples: Sequence[GraphSample]) -> List[List[int]]:
+        """Split samples into the device bins :meth:`run_bin` accepts.
+
+        Packed engines bin-pack mixed-size graphs under the budget rungs
+        (:func:`~repro.core.batching.pack_graphs`); bucketed engines
+        group by node bucket and chunk under the memory-envelope cap.
+        Returns lists of sample *indices*; every index appears exactly
+        once, so callers can scatter per-bin results back to input
+        order. Shared by :meth:`predict_samples` and the serving
+        micro-batcher (``repro.serve.PredictionService``).
+        """
+        if self.packed:
+            nb, eb, gb = self._budgets
+            return pack_graphs(samples, nb, eb, gb)
+        bins: List[List[int]] = []
+        for size, members in sorted(group_by_bucket(samples).items()):
+            cap = self._batch_cap(size)
+            bins.extend(members[i:i + cap]
+                        for i in range(0, len(members), cap))
+        return bins
+
+    def run_bin(self, chunk: Sequence[GraphSample]) -> np.ndarray:
+        """Run one pre-planned bin on the device — **thread-safe**.
+
+        The single dispatch point both prediction paths share:
+        :meth:`predict_samples` (bulk sweeps) and the serving
+        micro-batcher feed their :meth:`plan_bins` bins here. The
+        engine lock serializes staging, the jitted call, and stats, so
+        concurrent callers interleave at bin granularity. Non-packed
+        bins must be same-bucket (``plan_bins`` guarantees it). Returns
+        ``[len(chunk), n_targets]`` physical-unit predictions in chunk
+        order.
+        """
+        chunk = list(chunk)
+        if not chunk:
+            return np.zeros((0, self.cfg.n_targets), dtype=np.float32)
+        with self._lock:
+            if self.packed:
+                out = self._run_packed(chunk)
+            else:
+                sizes = {s.x.shape[0] for s in chunk}
+                if len(sizes) != 1:
+                    raise ValueError(
+                        f"run_bin needs a single-bucket chunk, got padded "
+                        f"sizes {sorted(sizes)} — plan with plan_bins()")
+                out = self._run_chunk(sizes.pop(), chunk)
+            self.stats.graphs_predicted += len(chunk)
+            return out
+
     def predict_samples(self, samples: Sequence[GraphSample]) -> np.ndarray:
         """Predict targets for padded samples, in input order.
 
@@ -353,24 +432,16 @@ class PredictionEngine:
         bin-pack mixed-size graphs onto the flat node axis
         (:func:`~repro.core.batching.pack_graphs`) instead of grouping
         by node bucket; results are scattered back to input order either
-        way.
+        way. Each bin dispatches through the thread-safe
+        :meth:`run_bin`, so bulk sweeps and serving traffic can share
+        one engine.
         """
         samples = list(samples)
         out = np.zeros((len(samples), self.cfg.n_targets), dtype=np.float32)
         if not samples:
             return out
-        if self.packed:
-            nb, eb, gb = self._budgets
-            for idx in pack_graphs(samples, nb, eb, gb):
-                out[idx] = self._run_packed([samples[j] for j in idx])
-        else:
-            for size, members in sorted(group_by_bucket(samples).items()):
-                cap = self._batch_cap(size)
-                for i in range(0, len(members), cap):
-                    idx = members[i:i + cap]
-                    out[idx] = self._run_chunk(size,
-                                               [samples[j] for j in idx])
-        self.stats.graphs_predicted += len(samples)
+        for idx in self.plan_bins(samples):
+            out[idx] = self.run_bin([samples[j] for j in idx])
         return out
 
     def predict_graphs(self, graphs: Sequence[OpGraph]) -> List["Prediction"]:

@@ -18,6 +18,7 @@ paper's Fig. 2.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from typing import Any, Dict, Optional
 
@@ -60,14 +61,16 @@ def from_json(doc: Dict[str, Any]) -> OpGraph:
     """Parse the portable schema (or a raw exporter node list) to OpGraph."""
     if doc.get("schema") == "repro.opgraph.v1":
         g = OpGraph.from_json(doc)
-        # re-canonicalize op names from foreign exporters
+        # re-canonicalize op names from foreign exporters; replace nodes
+        # instead of assigning nd.op in place — parsing must never
+        # mutate OpNodes it shares with the caller's graph objects
         raw = []
         for nd in g.nodes:
             op = nd.op if nd.op in OP_INDEX else _OP_ALIASES.get(nd.op.lower())
             if op is None:
                 op = "elementwise"
-            nd.op = op
-            raw.append(nd)
+            raw.append(nd if op == nd.op
+                       else dataclasses.replace(nd, op=op))
         return filter_and_preprocess(raw, g.edges, meta=g.meta)
     # raw exporter format: {"nodes": [{"id", "op", "out_shape", ...}],
     #                       "edges": [[s,d],...], "meta": {...}}

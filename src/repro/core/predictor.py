@@ -10,23 +10,30 @@ Frontends: any JAX callable (``predict_jax``), a serialized portable graph
 profile (eq. 2) and the TPU-slice recommendation are derived from the
 predicted memory exactly as §3.5 prescribes.
 
-For sweeps, ``predict_many`` routes whole graph lists through the batched
-prediction engine (``repro.core.engine``) — same results as a
-``predict_graph`` loop, one jit-compiled batched apply per padded shape —
-and ``predict_zoo`` runs a model-family grid end to end (build → trace →
-predict) without executing any of the candidate models.
+Every prediction path is a thin client of a shared default
+:class:`~repro.serve.PredictionService`: ``predict_graph`` is a
+submit + flush + wait round trip, ``predict_many`` a synchronous burst
+through the same micro-batcher — identical numbers either way because
+both flow through the one engine the service wraps. ``predict_zoo``
+runs a model-family grid end to end (build → trace → predict) without
+executing any of the candidate models, and ``DIPPM.serve(**overrides)``
+hands out a dedicated service for real request traffic
+(``docs/serving.md``).
+
+Persistence is the versioned pickle-free artifact format
+(``repro.serve.artifact``): ``save`` emits a v2 npz+JSON artifact;
+``load`` reads v2 and falls back — with a ``DeprecationWarning`` — to
+legacy pickle files.
 """
 from __future__ import annotations
 
 import dataclasses
-import pickle
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batching import collate, collate_packed, sample_from_graph
 from .frontends import from_jax, from_json
-from .gnn import PMGNSConfig, decode_targets, pmgns_apply
+from .gnn import PMGNSConfig
 from .ir import OpGraph
 from .mig import predict_mig, predict_pods, predict_tpu_slice
 
@@ -73,11 +80,17 @@ class DIPPM:
     """Trained predictor + frontends + resource advisors."""
 
     def __init__(self, params, cfg: PMGNSConfig):
+        import threading
         self.params = params
         self.cfg = cfg
         self._engine = None
+        self._service = None
+        #: guards lazy init of the default engine/service — concurrent
+        #: first calls must share ONE engine (and its compiled-fn
+        #: cache) and ONE batcher thread, not race into duplicates
+        self._init_lock = threading.Lock()
 
-    # -- constructors -------------------------------------------------------
+    # -- constructors / persistence -----------------------------------------
     @classmethod
     def from_params(cls, params, cfg: PMGNSConfig) -> "DIPPM":
         """Wrap already-trained PMGNS parameters."""
@@ -85,33 +98,79 @@ class DIPPM:
 
     @classmethod
     def load(cls, path: str) -> "DIPPM":
-        """Load a predictor saved with :meth:`save`."""
-        with open(path, "rb") as f:
-            blob = pickle.load(f)
-        return cls(blob["params"], blob["cfg"])
+        """Load a predictor saved with :meth:`save`.
 
-    def save(self, path: str) -> None:
-        """Pickle params + config (host arrays) to ``path``."""
+        Reads the v2 artifact format
+        (``repro.serve.artifact.load_artifact`` — npz params + JSON
+        config, no pickle execution); legacy pickle files from older
+        versions still load through the deprecated fallback, which
+        warns. Re-save to migrate them.
+        """
+        from ..serve.artifact import load_artifact
+        params, cfg, _meta = load_artifact(path)
+        return cls(params, cfg)
+
+    def save(self, path: str,
+             metadata: Optional[Dict[str, Any]] = None) -> None:
+        """Write a **v2 versioned artifact** (npz params + JSON config)
+        to ``path`` — see ``repro.serve.artifact``. Replaces the old
+        pickle format so serving processes can load models without
+        arbitrary-code-execution pickle; :meth:`load` still reads old
+        pickle files (with a ``DeprecationWarning``).
+        """
         import jax
+
+        from ..serve.artifact import save_artifact
         params = jax.tree_util.tree_map(np.asarray, self.params)
-        with open(path, "wb") as f:
-            pickle.dump({"params": params, "cfg": self.cfg}, f)
+        save_artifact(path, params, self.cfg, metadata=metadata)
+
+    # -- serving -------------------------------------------------------------
+    def serve(self, **overrides) -> "PredictionService":
+        """A dedicated micro-batching service over this predictor.
+
+        Keyword overrides are :class:`repro.serve.ServeConfig` fields
+        (``max_wait_ms``, ``max_batch_graphs``, ``node_budget``,
+        ``max_queue``, ...). Each call returns a **fresh**
+        :class:`~repro.serve.PredictionService` with its own engine and
+        batcher thread — close it (or use it as a context manager) when
+        done. The facade's own ``predict_*`` methods use a separate
+        shared default service and are unaffected.
+        """
+        from ..serve import PredictionService, ServeConfig
+        return PredictionService(self.params, self.cfg,
+                                 ServeConfig(**overrides))
+
+    def _default_service(self) -> "PredictionService":
+        """The lazily-built shared service behind ``predict_graph`` /
+        ``predict_many`` — wraps the default engine, so facade calls
+        and direct engine sweeps share one compiled-fn cache + stats.
+        A finalizer closes it when this ``DIPPM`` is collected, so a
+        loop over many loaded predictors doesn't accumulate batcher
+        threads (each would otherwise pin its engine + params forever).
+        """
+        if self._service is None:
+            import weakref
+
+            from ..serve import PredictionService
+            engine = self.engine()          # before the lock (own lock)
+            with self._init_lock:
+                if self._service is None:   # double-checked: one batcher
+                    svc = PredictionService(engine=engine)
+                    weakref.finalize(self, PredictionService.close, svc,
+                                     timeout=1.0)
+                    self._service = svc
+        return self._service
 
     # -- prediction ----------------------------------------------------------
     def predict_graph(self, g: OpGraph) -> Prediction:
-        """Predict one pre-built :class:`OpGraph` (single-shot path)."""
-        import jax.numpy as jnp
-        sample = sample_from_graph(g)
-        layout = self.cfg.resolved_layout
-        if layout == "packed":
-            batch = collate_packed([sample])
-        else:
-            batch = collate([sample], sparse=layout == "sparse")
-        jb = {k: jnp.asarray(v) for k, v in batch.items()
-              if k not in ("y", "wt")}
-        pred = pmgns_apply(self.params, self.cfg, jb, train=False)
-        return make_prediction(np.asarray(decode_targets(pred))[0],
-                               meta=dict(g.meta))
+        """Predict one pre-built :class:`OpGraph`.
+
+        A synchronous round trip through the shared default service
+        (submit + flush + wait): single-shot calls ride the same
+        jit-compiled engine bins as sweeps — no eager batch-of-1 apply —
+        and concurrent callers coalesce into shared bins automatically.
+        """
+        return self._default_service().predict_one(g)
 
     def predict_jax(self, forward, param_specs, *input_specs,
                     batch: Optional[int] = None,
@@ -144,10 +203,11 @@ class DIPPM:
         if overrides:
             return PredictionEngine(self.params, self.cfg,
                                     EngineConfig(**overrides))
-        if self._engine is None:
-            self._engine = PredictionEngine(self.params, self.cfg,
-                                            EngineConfig())
-        return self._engine
+        with self._init_lock:
+            if self._engine is None:
+                self._engine = PredictionEngine(self.params, self.cfg,
+                                                EngineConfig())
+            return self._engine
 
     def predict_many(self, graphs: Sequence[OpGraph],
                      return_stats: bool = False):
@@ -165,10 +225,16 @@ class DIPPM:
         engine counters including ``padding_waste_frac``,
         ``cache_entries``, and ``recompiles``, so sweeps can report how
         much device work was padding and how many shapes compiled.
+
+        Delegates to the shared default service (a synchronous burst
+        through its micro-batcher — same engine, same bins, same
+        numbers as before the serving redesign).
         """
-        preds = self.engine().predict_graphs(graphs)
+        graphs = list(graphs)
+        svc = self._default_service()       # one engine, snapshotted once
+        preds = svc.predict_many(graphs)
         if return_stats:
-            return preds, self.engine().stats.snapshot()
+            return preds, svc.engine.stats.snapshot()
         return preds
 
     def predict_zoo(self, family: str,

@@ -1,0 +1,23 @@
+"""``repro.serve`` — request-oriented serving on top of the core engine.
+
+* :class:`PredictionService` / :class:`ServeConfig` / :class:`ServeStats`
+  — the micro-batching request/response service (``service.py``).
+* :class:`PredictionFuture` / :class:`QueueFullError` — request
+  plumbing (``queue.py``).
+* :func:`save_artifact` / :func:`load_artifact` — versioned, pickle-free
+  model artifacts (``artifact.py``).
+
+Entry points: ``DIPPM.serve(**overrides)`` for a dedicated service, or
+construct :class:`PredictionService` directly around trained params (or
+an existing engine). See ``docs/serving.md``.
+"""
+from .artifact import (ARTIFACT_SCHEMA, ARTIFACT_VERSION, load_artifact,
+                       save_artifact)
+from .queue import PredictionFuture, QueueFullError
+from .service import PredictionService, ServeConfig, ServeStats
+
+__all__ = [
+    "PredictionService", "ServeConfig", "ServeStats", "PredictionFuture",
+    "QueueFullError", "save_artifact", "load_artifact", "ARTIFACT_SCHEMA",
+    "ARTIFACT_VERSION",
+]

@@ -1,0 +1,146 @@
+"""Versioned model artifacts — pickle-free predictor persistence.
+
+``DIPPM.save`` used to pickle ``{params, cfg}``; a serving process
+loading that file executes arbitrary code if the artifact is tampered
+with, and the format is opaque to anything but this Python process. The
+v2 artifact is a single ``.npz`` file (a zip, so one deployable blob)
+holding:
+
+* ``__dippm_artifact__`` — a UTF-8 JSON header (stored as a uint8
+  array: npz carries arrays, and this keeps the whole file loadable
+  with ``allow_pickle=False``) with a ``schema`` / ``schema_version``
+  pair, the full :class:`~repro.core.gnn.PMGNSConfig` as plain JSON, a
+  per-leaf manifest (key → shape/dtype), and caller metadata;
+* one array entry per parameter leaf, keyed ``params/<path>`` with
+  ``/``-joined pytree paths (``params/gnn/b0/self/w``).
+
+Loading never unpickles: :func:`load_artifact` reads with
+``allow_pickle=False``, validates the schema version, and rebuilds the
+nested params dict from the manifest. Legacy pickle files (schema v1)
+still load through an explicit **deprecated fallback** that warns —
+migrate by re-saving, which emits v2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.gnn import PMGNSConfig
+
+__all__ = ["save_artifact", "load_artifact", "ARTIFACT_SCHEMA",
+           "ARTIFACT_VERSION"]
+
+ARTIFACT_SCHEMA = "repro.dippm.artifact"
+ARTIFACT_VERSION = 2
+
+_PARAM_PREFIX = "params/"
+
+
+def _flatten(tree, prefix: str, out: Dict[str, np.ndarray]) -> None:
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            key = str(k)
+            if "/" in key:
+                raise ValueError(
+                    f"param key {key!r} contains '/', which is the "
+                    f"artifact path separator")
+            _flatten(tree[k], f"{prefix}{key}/", out)
+        return
+    out[prefix[:-1]] = np.asarray(tree)         # drop the trailing '/'
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for key, leaf in flat.items():
+        node = tree
+        parts = key.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def save_artifact(path: str, params, cfg: PMGNSConfig,
+                  metadata: Optional[Dict[str, Any]] = None) -> str:
+    """Write a v2 artifact (npz params + JSON header) to ``path``.
+
+    ``params`` is the PMGNS pytree (nested dicts of arrays; device
+    arrays are pulled to host). ``metadata`` is free-form JSON-able
+    caller context (training run id, dataset hash, ...). Returns
+    ``path``. The exact path is used — no ``.npz`` suffix is appended.
+    """
+    flat: Dict[str, np.ndarray] = {}
+    _flatten(params, "", flat)
+    doc = {
+        "schema": ARTIFACT_SCHEMA,
+        "schema_version": ARTIFACT_VERSION,
+        "cfg": dataclasses.asdict(cfg),
+        "metadata": dict(metadata or {}),
+        "params": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    header = np.frombuffer(json.dumps(doc).encode("utf-8"), dtype=np.uint8)
+    with open(path, "wb") as f:
+        np.savez(f, __dippm_artifact__=header,
+                 **{_PARAM_PREFIX + k: v for k, v in flat.items()})
+    return path
+
+
+def _load_pickle_fallback(path: str) -> Tuple[Dict, PMGNSConfig, Dict]:
+    """Deprecated v1 loader: the legacy ``DIPPM.save`` pickle blob."""
+    import pickle
+    warnings.warn(
+        f"{path} is a legacy pickle predictor (artifact schema v1): "
+        f"loading it executes pickle and is deprecated — re-save with "
+        f"DIPPM.save / save_artifact to migrate to the v2 npz format",
+        DeprecationWarning, stacklevel=3)
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    return blob["params"], blob["cfg"], {"schema_version": 1,
+                                         "format": "pickle"}
+
+
+def load_artifact(path: str) -> Tuple[Dict, PMGNSConfig, Dict[str, Any]]:
+    """Load an artifact → ``(params, cfg, metadata)``.
+
+    v2 files load with ``allow_pickle=False`` (no code execution);
+    anything that isn't a zip falls back to the deprecated v1 pickle
+    loader with a ``DeprecationWarning``. Unknown schemas or a
+    ``schema_version`` newer than this library raise ``ValueError``.
+    """
+    with open(path, "rb") as f:
+        magic = f.read(2)
+    if magic != b"PK":                          # not a zip → legacy pickle
+        return _load_pickle_fallback(path)
+    with np.load(path, allow_pickle=False) as z:
+        if "__dippm_artifact__" not in z.files:
+            raise ValueError(
+                f"{path} is an npz without an artifact header — not a "
+                f"DIPPM artifact")
+        doc = json.loads(bytes(z["__dippm_artifact__"]).decode("utf-8"))
+        if doc.get("schema") != ARTIFACT_SCHEMA:
+            raise ValueError(
+                f"unknown artifact schema {doc.get('schema')!r} "
+                f"(expected {ARTIFACT_SCHEMA!r})")
+        version = doc.get("schema_version")
+        if not isinstance(version, int) or version > ARTIFACT_VERSION:
+            raise ValueError(
+                f"artifact schema_version {version!r} is newer than this "
+                f"library supports (≤ {ARTIFACT_VERSION}) — upgrade repro")
+        manifest = doc.get("params", {})
+        flat = {}
+        for key, spec in manifest.items():
+            arr = z[_PARAM_PREFIX + key]
+            if list(arr.shape) != list(spec["shape"]):
+                raise ValueError(
+                    f"artifact corrupt: {key} has shape {arr.shape}, "
+                    f"manifest says {spec['shape']}")
+            flat[key] = arr
+    known = {f.name for f in dataclasses.fields(PMGNSConfig)}
+    cfg_doc = {k: v for k, v in doc.get("cfg", {}).items() if k in known}
+    return _unflatten(flat), PMGNSConfig(**cfg_doc), dict(
+        doc.get("metadata", {}))

@@ -1,0 +1,365 @@
+"""Request-oriented serving core — DIPPM as a prediction *service*.
+
+The batched engine (``repro.core.engine``) is great when one caller
+already holds a graph list; serving traffic is the opposite shape —
+many concurrent callers each holding ONE graph. A naive per-request
+``predict_graph`` loop runs a 1-graph bin per call and leaves the
+engine's packed bins almost empty. :class:`PredictionService` closes
+that gap:
+
+1. **Submit** — any thread calls :meth:`~PredictionService.submit`
+   (or ``submit_json`` / ``submit_jax`` via the existing frontends) and
+   gets a :class:`~repro.serve.queue.PredictionFuture` back immediately;
+   featurization (``sample_from_graph``) happens on the caller's thread
+   so the batcher stays on the device hot path.
+2. **Coalesce** — a background micro-batcher drains the queue under a
+   latency/size policy (:class:`ServeConfig`): flush when
+   ``max_batch_graphs`` requests are waiting or the oldest request is
+   ``max_wait_ms`` old, whichever comes first.
+3. **Bin-pack + run** — the drained batch is planned into the engine's
+   budget-rung bins (``PredictionEngine.plan_bins`` →
+   ``pack_graphs``) and each bin runs one jitted packed apply through
+   the thread-safe ``PredictionEngine.run_bin``.
+4. **Resolve in arrival order** — per-request ``Prediction``s scatter
+   back to submission order; futures resolve FIFO with per-request
+   latency stamped, and :attr:`PredictionService.stats` aggregates
+   queue depth, batch occupancy, padding waste, and p50/p99 latency.
+
+``warmup(rungs=...)`` precompiles the budget-rung ladder before traffic;
+``ServeConfig(max_queue=N)`` turns on bounded-queue admission control
+(reject-with-:class:`~repro.serve.queue.QueueFullError` instead of
+buffering unboundedly). The ``DIPPM`` facade's ``predict_graph`` /
+``predict_many`` are thin clients of a shared default service — see
+``DIPPM.serve(**overrides)`` for a dedicated instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.batching import (packed_rung_ladder, resolve_packed_budgets,
+                             sample_from_graph)
+from ..core.engine import EngineConfig, PredictionEngine
+from ..core.ir import OpGraph
+from .queue import PredictionFuture, QueueFullError, Request, RequestQueue
+
+__all__ = ["ServeConfig", "ServeStats", "PredictionService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Micro-batching policy knobs.
+
+    ``max_wait_ms`` bounds how long the first request of a batch can
+    wait for companions (the latency the service *adds* at low load);
+    ``max_batch_graphs`` bounds how many requests coalesce into one
+    drain (the throughput lever at high load). ``node_budget`` /
+    ``edge_budget`` / ``graph_budget`` size the engine's packed bins
+    when the service builds its own engine (ignored when wrapping an
+    existing one). ``max_queue=None`` buffers without bound; an int
+    turns on admission control — ``submit`` raises
+    :class:`~repro.serve.queue.QueueFullError` once that many requests
+    are waiting.
+    """
+
+    max_wait_ms: float = 2.0
+    max_batch_graphs: int = 256
+    node_budget: Optional[int] = None
+    edge_budget: Optional[int] = None
+    graph_budget: Optional[int] = None
+    max_queue: Optional[int] = None
+    #: Size of the rolling latency window behind the p50/p99 stats.
+    latency_window: int = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """A detached snapshot of service counters (``service.stats``).
+
+    ``batch_occupancy`` is mean graphs per drained batch — how well
+    coalescing is working (1.0 ≡ the per-request loop the service
+    exists to beat). ``padding_waste_frac`` comes from the underlying
+    engine (fraction of device node rows that were padding).
+    Percentiles are over the last ``ServeConfig.latency_window``
+    resolved requests.
+    """
+
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    failed: int = 0
+    batches: int = 0
+    bins: int = 0
+    queue_depth: int = 0
+    queue_peak: int = 0
+    batch_occupancy: float = 0.0
+    padding_waste_frac: float = 0.0
+    latency_ms_p50: float = 0.0
+    latency_ms_p99: float = 0.0
+
+
+class PredictionService:
+    """Thread-safe micro-batching prediction service over one engine.
+
+    Construct from trained ``(params, cfg)`` — or wrap an existing
+    :class:`~repro.core.engine.PredictionEngine` via ``engine=`` so the
+    service shares its compiled-fn cache and stats with bulk-sweep
+    callers (this is how the ``DIPPM`` facade's default service is
+    built). The batcher thread starts immediately and is a daemon;
+    call :meth:`close` (or use the service as a context manager) for an
+    orderly drain.
+    """
+
+    def __init__(self, params=None, cfg=None,
+                 serve_cfg: Optional[ServeConfig] = None, *,
+                 engine: Optional[PredictionEngine] = None,
+                 engine_cfg: Optional[EngineConfig] = None):
+        self.serve_cfg = serve_cfg or ServeConfig()
+        if engine is None:
+            if params is None or cfg is None:
+                raise ValueError(
+                    "PredictionService needs (params, cfg) or engine=")
+            sc = self.serve_cfg
+            if engine_cfg is None and (sc.node_budget or sc.edge_budget
+                                       or sc.graph_budget):
+                engine_cfg = EngineConfig(
+                    node_budget=sc.node_budget
+                    or EngineConfig.node_budget,
+                    edge_budget=sc.edge_budget,
+                    graph_budget=sc.graph_budget)
+            engine = PredictionEngine(params, cfg,
+                                      engine_cfg or EngineConfig())
+        self.engine = engine
+        self._queue = RequestQueue(max_size=self.serve_cfg.max_queue,
+                                   batch_hint=self.serve_cfg.max_batch_graphs)
+        self._state = threading.Lock()          # guards the counters below
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._failed = 0
+        self._batches = 0
+        self._bins = 0
+        self._latencies: deque = deque(maxlen=self.serve_cfg.latency_window)
+        self._worker = threading.Thread(
+            target=self._run, name="dippm-serve-batcher", daemon=True)
+        self._worker.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, g: OpGraph) -> PredictionFuture:
+        """Enqueue one graph; returns immediately with a future.
+
+        Featurization runs here, on the caller's thread. Raises
+        :class:`~repro.serve.queue.QueueFullError` under admission
+        control and ``RuntimeError`` after :meth:`close`.
+        """
+        ecfg = self.engine.engine_cfg
+        sample = sample_from_graph(g, buckets=ecfg.buckets,
+                                   extended_static=ecfg.extended_static)
+        return self._submit_sample(sample, dict(g.meta))
+
+    def submit_json(self, doc: Dict[str, Any]) -> PredictionFuture:
+        """Enqueue a portable serialized graph (``repro.opgraph.v1`` or
+        a raw exporter node list) — the ``from_json`` frontend."""
+        from ..core.frontends import from_json
+        return self.submit(from_json(doc))
+
+    def submit_jax(self, forward, param_specs, *input_specs,
+                   batch: Optional[int] = None,
+                   meta: Optional[Dict[str, Any]] = None
+                   ) -> PredictionFuture:
+        """Trace a JAX callable abstractly and enqueue it — the
+        ``from_jax`` frontend (tracing happens on the caller's thread)."""
+        from ..core.frontends import from_jax
+        m = dict(meta or {})
+        if batch is not None:
+            m.setdefault("batch", batch)
+        return self.submit(from_jax(forward, param_specs, *input_specs,
+                                    meta=m))
+
+    def _submit_sample(self, sample, meta) -> PredictionFuture:
+        try:
+            req = self._queue.put(sample, meta)
+        except QueueFullError:
+            with self._state:
+                self._rejected += 1
+            raise
+        with self._state:
+            self._submitted += 1
+        return req.future
+
+    def submit_many(self, graphs: Sequence[OpGraph]
+                    ) -> List[PredictionFuture]:
+        """Enqueue a burst atomically — one queue transaction, so the
+        batcher plans the whole burst into the same bins a direct
+        engine sweep would (no fragmentation across drains while late
+        members are still featurizing). All-or-nothing under admission
+        control."""
+        ecfg = self.engine.engine_cfg
+        items = [(sample_from_graph(g, buckets=ecfg.buckets,
+                                    extended_static=ecfg.extended_static),
+                  dict(g.meta)) for g in graphs]
+        try:
+            reqs = self._queue.put_many(items)
+        except QueueFullError:
+            with self._state:
+                self._rejected += len(items)
+            raise
+        with self._state:
+            self._submitted += len(reqs)
+        return [r.future for r in reqs]
+
+    # -- synchronous conveniences (the facade's delegation path) -------------
+    def flush(self) -> None:
+        """Drain what's queued now instead of waiting out ``max_wait_ms``
+        — bulk callers use this so delegation adds no idle latency."""
+        self._queue.flush()
+
+    def predict_one(self, g: OpGraph,
+                    timeout: Optional[float] = None):
+        """Synchronous single prediction: submit + flush + wait."""
+        fut = self.submit(g)
+        self.flush()
+        return fut.result(timeout)
+
+    def predict_many(self, graphs: Sequence[OpGraph],
+                     timeout: Optional[float] = None) -> List:
+        """Synchronous bulk prediction, input order preserved.
+
+        Equivalent to the engine's ``predict_graphs`` (same bins when
+        the burst fits one drain — :meth:`submit_many` enqueues
+        atomically); under admission control a burst that doesn't fit
+        ``max_queue`` raises
+        :class:`~repro.serve.queue.QueueFullError` without enqueuing
+        anything.
+        """
+        futs = self.submit_many(list(graphs))
+        self.flush()
+        return [f.result(timeout) for f in futs]
+
+    # -- lifecycle -----------------------------------------------------------
+    def warmup(self, rungs=None) -> int:
+        """Precompile before traffic; returns functions compiled.
+
+        Packed engines compile the whole ``(P, Q, G)`` budget-rung
+        ladder by default (``rungs=None`` →
+        :func:`~repro.core.batching.packed_rung_ladder`; pass a
+        sequence of ``P`` values to select rungs). Bucketed engines
+        treat ``rungs`` as node buckets (default: all of them).
+        """
+        if self.engine.packed:
+            return self.engine.warmup(rungs="all" if rungs is None
+                                      else rungs)
+        return self.engine.warmup(node_buckets=rungs)
+
+    def expected_rungs(self) -> int:
+        """How many shapes :meth:`warmup` precompiles by default."""
+        if self.engine.packed:
+            nb, eb, gb = resolve_packed_budgets(
+                self.engine.engine_cfg.node_budget,
+                self.engine.engine_cfg.edge_budget,
+                self.engine.engine_cfg.graph_budget)
+            return len(packed_rung_ladder(nb, eb, gb))
+        return len(self.engine.engine_cfg.buckets)
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """Refuse new requests, drain the queue, stop the batcher."""
+        self._queue.close()
+        self._worker.join(timeout)
+
+    def __enter__(self) -> "PredictionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def stats(self) -> ServeStats:
+        """A detached :class:`ServeStats` snapshot."""
+        with self._state:
+            lat = np.asarray(self._latencies, dtype=np.float64)
+            batches = self._batches
+            occupancy = (self._completed / batches) if batches else 0.0
+            return ServeStats(
+                submitted=self._submitted,
+                completed=self._completed,
+                rejected=self._rejected,
+                failed=self._failed,
+                batches=batches,
+                bins=self._bins,
+                queue_depth=len(self._queue),
+                queue_peak=self._queue.peak_depth,
+                batch_occupancy=round(occupancy, 3),
+                padding_waste_frac=self.engine.stats.padding_waste_frac,
+                latency_ms_p50=float(np.percentile(lat, 50))
+                if lat.size else 0.0,
+                latency_ms_p99=float(np.percentile(lat, 99))
+                if lat.size else 0.0,
+            )
+
+    # -- batcher thread ------------------------------------------------------
+    def _run(self) -> None:
+        sc = self.serve_cfg
+        while True:
+            batch, _depth = self._queue.wait_batch(
+                sc.max_batch_graphs, sc.max_wait_ms / 1e3)
+            if not batch:
+                return                          # closed and drained
+            try:
+                self._process(batch)
+            except Exception as e:              # pragma: no cover — belt
+                # _process guards itself; this keeps ANY escape from
+                # killing the batcher (a dead batcher hangs every
+                # pending and future request forever)
+                for r in batch:
+                    if not r.future.done():
+                        r.future._reject(e)
+
+    def _process(self, batch: List[Request]) -> None:
+        import time
+
+        from ..core.predictor import make_prediction
+        lats: List[float] = []
+        done = failed = n_bins = 0
+        try:
+            samples = [r.sample for r in batch]
+            # plan once, dispatch each bin through the thread-safe
+            # run_bin (bin count tracked locally — the engine may be
+            # shared with concurrent direct callers, so diffing its
+            # counters would over-count)
+            bins = self.engine.plan_bins(samples)
+            n_bins = len(bins)
+            ys = np.zeros((len(samples), self.engine.cfg.n_targets),
+                          dtype=np.float32)
+            for idx in bins:
+                ys[idx] = self.engine.run_bin([samples[j] for j in idx])
+            t_done = time.perf_counter()
+            # batch is FIFO-drained, so walking it resolves futures in
+            # submission order; ys is already scattered to batch order
+            for r, y in zip(batch, ys):
+                lat_ms = (t_done - r.t_submit) * 1e3
+                try:
+                    pred = make_prediction(y, meta=r.meta)
+                except Exception as e:          # a bad row fails one future
+                    r.future._reject(e)
+                    failed += 1
+                    continue
+                lats.append(lat_ms)
+                done += 1
+                r.future._resolve(pred, lat_ms)
+        except Exception as e:                  # resolve, never hang callers
+            for r in batch:
+                if not r.future.done():
+                    r.future._reject(e)
+                    failed += 1
+        finally:
+            with self._state:
+                self._completed += done
+                self._failed += failed
+                self._batches += 1
+                self._bins += n_bins
+                self._latencies.extend(lats)

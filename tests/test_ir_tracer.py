@@ -94,6 +94,27 @@ def test_foreign_json_frontend_aliases():
     assert g.edges == [(0, 1), (1, 2)]
 
 
+def test_schema_from_json_does_not_mutate_parsed_nodes():
+    """Re-canonicalizing aliased op names must build new OpNodes — the
+    parse must not write through to node objects the caller can see,
+    and re-parsing the same doc must be stable."""
+    import copy
+    src = OpGraph(
+        nodes=[OpNode(0, "gemm", (4, 64), flops=512.0),
+               OpNode(1, "ReLU", (4, 64), flops=256.0)],
+        edges=[(0, 1)], meta={"family": "external"})
+    doc = src.to_json()
+    pristine = copy.deepcopy(doc)
+    g1 = from_json(doc)
+    assert doc == pristine                       # input doc untouched
+    # the caller's graph keeps its exporter-native op names
+    assert [nd.op for nd in src.nodes] == ["gemm", "ReLU"]
+    assert [nd.op for nd in g1.nodes] == ["dense", "relu"]
+    g2 = from_json(doc)                          # re-parse: unchanged
+    assert [nd.op for nd in g2.nodes] == ["dense", "relu"]
+    assert g2.fingerprint() == g1.fingerprint()
+
+
 @given(st.integers(1, 4), st.integers(1, 3))
 @settings(max_examples=8, deadline=None)
 def test_fingerprint_depends_on_structure(depth, scale):
