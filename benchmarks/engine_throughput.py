@@ -105,6 +105,8 @@ def run(n_graphs: int = 64, hidden: int = 128, repeats: int = 3):
         "cache_entries": stats.cache_entries,
         "recompiles": stats.recompiles,
         "padding_waste_frac": round(stats.padding_waste_frac, 4),
+        "precision": stats.precision,
+        "bf16_max_abs_delta": stats.bf16_max_abs_delta,
     }
     res["artifact"] = write_json("engine_throughput.json", res)
     return res
@@ -123,6 +125,11 @@ def main():
     print(f"stats  : {res['cache_entries']} cache entries, "
           f"{res['recompiles']} recompiles, "
           f"{res['padding_waste_frac']:.1%} of node rows padding")
+    delta = res["bf16_max_abs_delta"]
+    print(f"precis : policy {res['precision']}"
+          + (f", bf16 warmup |Δ| vs f32 = {delta:.2e}"
+             if delta is not None else
+             " (bf16 drift probe runs only under precision='bf16')"))
     print(f"speedup: {res['speedup']:.2f}x   "
           f"max |diff| = {res['max_abs_diff']:.2e}")
     ok = res["speedup"] >= 3.0 and res["max_abs_diff"] <= 1e-5

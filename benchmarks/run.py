@@ -25,7 +25,7 @@ def main() -> None:
     epochs = args.epochs or (60 if args.full else 25)
 
     from . import (engine_throughput, fig3_mig_memory, fig4_scatter,
-                   microbench, packed_batching, roofline_report,
+                   fused_mp, microbench, packed_batching, roofline_report,
                    serving_latency, sparse_mp, table2_dataset, table4_gnn,
                    table5_mig, train_throughput)
 
@@ -35,6 +35,7 @@ def main() -> None:
         "train": lambda: train_throughput.run(),
         "sparse_mp": lambda: sparse_mp.run(),
         "packed_batching": lambda: packed_batching.run(),
+        "fused_mp": lambda: fused_mp.run(),
         "serving_latency": lambda: serving_latency.run(),
         "table2": lambda: table2_dataset.run(n_graphs=n_graphs),
         "table4": lambda: table4_gnn.run(n_graphs=n_graphs, epochs=epochs),

@@ -112,6 +112,11 @@ class EngineStats:
     recompiles: int = 0
     node_slots_total: int = 0
     node_slots_real: int = 0
+    #: Active inference precision policy (``cfg.resolved_precision``).
+    precision: str = "f32"
+    #: Max |bf16 − f32| prediction delta measured on a synthetic packed
+    #: batch at warmup (``None`` until a bf16 packed engine warms up).
+    bf16_max_abs_delta: Optional[float] = None
 
     @property
     def padding_waste_frac(self) -> float:
@@ -150,6 +155,24 @@ class PredictionEngine:
         self.cfg = cfg
         self.engine_cfg = engine_cfg
         self.stats = EngineStats()
+        #: bf16 precision = *staging* compression on the packed hot
+        #: path: the per-request host→device float buffer ships as
+        #: bfloat16 (half the recurring transfer bytes) and the staged
+        #: infer fn upcasts to f32 before compute
+        #: (``make_staged_packed_infer_fn``). Parameters stay f32 —
+        #: they transfer once at load, and holding them in bf16 was
+        #: measured at ~1.9 % prediction MAPE vs ~0.4 % for
+        #: staging-only (``benchmarks/fused_mp.py`` gates ≤ 0.5 %).
+        #: ``int8-weights`` is artifact-level (``serve.artifact``), so
+        #: runtime behaves as f32 here. Non-packed layouts have no
+        #: staged cast point and always run f32.
+        self._precision = cfg.resolved_precision
+        self.stats.precision = self._precision
+        if self._precision == "bf16" and cfg.resolved_layout == "packed":
+            import ml_dtypes
+            self._stage_dtype = ml_dtypes.bfloat16
+        else:
+            self._stage_dtype = np.float32
         #: Engine follows the model's batch layout
         #: (``cfg.resolved_layout``): sparse chunks carry padded edge
         #: lists (shape key gains the edge bucket, no dense adjacency is
@@ -243,8 +266,12 @@ class PredictionEngine:
                     fn = self._packed_fn(p, q, g)
                     _, _, _, f_len, i_len = packed_staging_layout(
                         self.cfg, p, q, g)
-                    fn(self.params, jnp.zeros((f_len,)),
+                    fn(self.params,
+                       jnp.zeros((f_len,), self._stage_dtype),
                        jnp.zeros((i_len,), jnp.int32)).block_until_ready()
+                if self._precision == "bf16":
+                    self.stats.bf16_max_abs_delta = \
+                        self._measure_bf16_delta()
                 return self.stats.cache_misses - before
         if rungs is not None:
             raise ValueError(
@@ -272,6 +299,42 @@ class PredictionEngine:
                         batch["adj"] = jnp.zeros((b, n, n))
                     fn(self.params, batch).block_until_ready()
             return self.stats.cache_misses - before
+
+    def _measure_bf16_delta(self) -> float:
+        """Max |bf16 − f32| prediction delta on one synthetic packed bin.
+
+        Runs the engine's bf16 staged path and an f32 twin of the same
+        ``(P, Q, G)`` shape over identical random inputs and compares
+        real graph rows — the per-warmup numerics probe surfaced as
+        ``EngineStats.bf16_max_abs_delta``.
+        """
+        import jax.numpy as jnp
+
+        from .gnn import make_staged_packed_infer_fn as make_fn
+        nb, eb, gb = self._budgets
+        p = min(nb, 256)
+        q, g = packed_rung(p, eb, gb)
+        feat, sdim = self.cfg.node_feat_dim, self.cfg.static_dim
+        o1, o2, o3, f_len, i_len = packed_staging_layout(self.cfg, p, q, g)
+        rng = np.random.default_rng(0)
+        n_real, q_real, g_real = p * 7 // 8, q // 2, max(g // 2, 1)
+        fbuf = np.zeros(f_len, np.float32)
+        ibuf = np.zeros(i_len, np.int32)
+        x = fbuf[:o1].reshape(p, feat)
+        x[:n_real] = rng.standard_normal((n_real, feat)).astype(np.float32)
+        fbuf[o1:o1 + n_real] = 1.0                      # node mask
+        fbuf[o2:o2 + q_real] = 1.0                      # edge mask
+        fbuf[o3:] = rng.standard_normal(g * sdim).astype(np.float32)
+        ibuf[:2 * q_real] = rng.integers(0, n_real, 2 * q_real)
+        ibuf[2 * q:] = np.minimum(np.arange(p) * g_real // max(n_real, 1),
+                                  g_real - 1)           # ascending ids
+        y16 = np.asarray(self._packed_fn(p, q, g)(
+            self.params, jnp.asarray(fbuf.astype(self._stage_dtype)),
+            jnp.asarray(ibuf)))
+        cfg32 = dataclasses.replace(self.cfg, precision="f32")
+        y32 = np.asarray(make_fn(cfg32, p, q, g)(
+            self.params, jnp.asarray(fbuf), jnp.asarray(ibuf)))
+        return float(np.max(np.abs(y16[:g_real] - y32[:g_real])))
 
     @staticmethod
     def _edge_floor(node_bucket: int) -> int:
@@ -343,7 +406,7 @@ class PredictionEngine:
         feat = self.cfg.node_feat_dim
         sdim = self.cfg.static_dim
         o1, o2, o3, f_len, i_len = packed_staging_layout(self.cfg, p, q, g)
-        fbuf = np.zeros(f_len, np.float32)
+        fbuf = np.zeros(f_len, self._stage_dtype)
         ibuf = np.zeros(i_len, np.int32)
         collate_packed(chunk, out={
             "x": fbuf[:o1].reshape(p, feat),

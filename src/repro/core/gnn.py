@@ -305,6 +305,27 @@ class PMGNSConfig:
     #: All three layouts agree to ≤1e-5
     #: (``benchmarks/packed_batching.py`` gates this).
     layout: str = "auto"
+    #: Inference precision policy. ``"f32"`` is the reference.
+    #: ``"bf16"`` stages request buffers (features/masks/statics) in
+    #: bfloat16 — half the host→device staging bytes — and upcasts to
+    #: float32 inside the jitted function; parameters stay f32 (rounding
+    #: the weights too was measured at ~1.9 % MAPE drift vs ~0.4 % for
+    #: staging-only, blowing the ≤ 0.5 % gate in
+    #: ``benchmarks/fused_mp.py``). ``"int8-weights"`` is an *artifact-level*
+    #: policy: ``serve.artifact.save_artifact`` block-quantizes ≥2-D
+    #: floating weights to int8 with per-row scales and the loader
+    #: dequantizes back to f32, so runtime numerics are plain f32.
+    precision: str = "f32"
+    #: Fused message-passing megakernel policy (packed layout only):
+    #: ``"auto"`` fuses on the packed layout at inference, ``"on"``
+    #: requires the packed layout (raises otherwise), ``"off"`` keeps
+    #: the composed per-op path. The fused path collapses each MP layer
+    #: (gather → mask → scatter → combine → bias → act → node-mask)
+    #: into one kernel call — a single ``pallas_call`` on TPU
+    #: (``repro.kernels.segment_spmm.fused_mp_layer_pallas``), one fused
+    #: jnp composition on CPU. Training always uses the composed path
+    #: (dropout between stages).
+    fused_mp: str = "auto"
 
     @property
     def resolved_layout(self) -> str:
@@ -317,6 +338,31 @@ class PMGNSConfig:
                 f"layout must be auto|dense|sparse|packed, "
                 f"got {self.layout!r}")
         return self.layout
+
+    @property
+    def resolved_precision(self) -> str:
+        """Validated inference precision policy."""
+        if self.precision not in ("f32", "bf16", "int8-weights"):
+            raise ValueError(
+                f"precision must be f32|bf16|int8-weights, "
+                f"got {self.precision!r}")
+        return self.precision
+
+    @property
+    def resolved_fused(self) -> bool:
+        """Whether inference runs the fused message-passing stack."""
+        if self.fused_mp == "off":
+            return False
+        if self.fused_mp == "auto":
+            return self.resolved_layout == "packed"
+        if self.fused_mp == "on":
+            if self.resolved_layout != "packed":
+                raise ValueError(
+                    "fused_mp='on' requires layout='packed' — the fused "
+                    "megakernel operates on the flat packed node axis")
+            return True
+        raise ValueError(
+            f"fused_mp must be auto|on|off, got {self.fused_mp!r}")
 
 
 def pmgns_init(key, cfg: PMGNSConfig) -> Params:
@@ -365,6 +411,85 @@ def _readout_packed(h, graph_ids, node_mask, n_graphs, kind,
     return segment_readout_ref(h, graph_ids, node_mask, n_graphs, kind=kind)
 
 
+def _fused_mp_stack(p: Params, cfg: PMGNSConfig, x, mask, edges, edge_mask):
+    """All GNN blocks as fused per-layer megakernel calls (packed layout).
+
+    Operates directly on the flat packed axis (``x [P, F]``, globally
+    offset ``edges [Q, 2]``) with no per-layer batch-of-one wrapping.
+    Each variant maps onto :func:`repro.kernels.ops.fused_mp_layer`'s
+    combine modes — GraphSAGE as ``mean``/``split``, GCN as ``sum``/
+    ``pre`` with the ``d̂⁻¹·d̂⁻¹`` self-loop scale and normalization
+    weights riding in through ``edge_mask``, GIN's first MLP linear as
+    ``sum``/``pre`` with scale ``1 + ε`` (the second linear stays
+    outside: its bias must be applied before the node mask, exactly as
+    the composed path does). GAT runs the composed projection +
+    edge-softmax, then the fused gather⊙attention→scatter stage.
+    Numerics match the composed path to float tolerance
+    (``benchmarks/fused_mp.py`` gates ≤ 1e-5).
+    """
+    if cfg.use_pallas:
+        from ..kernels.ops import fused_mp_layer as fused
+    else:
+        from ..kernels.ref import fused_mp_layer_ref as fused
+    h = x
+    if cfg.variant == "graphsage":
+        for i in range(cfg.n_gnn_blocks):
+            lp = p["gnn"][f"b{i}"]
+            h = fused(h, edges, edge_mask, mask, w_neigh=lp["neigh"]["w"],
+                      w_self=lp["self"]["w"], bias=lp["self"].get("b"),
+                      mode="mean", combine="split", act="relu")
+    elif cfg.variant == "gcn":
+        from ..kernels.ref import segment_degree_ref
+        n = x.shape[0]
+        src, dst = edges[:, 0], edges[:, 1]
+        # the normalization depends only on the graph, not the layer —
+        # hoisted out of the loop (the composed path recomputes it)
+        deg = segment_degree_ref(edges[None], edge_mask[None], n)[0] + mask
+        dinv = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+        w = edge_mask * jnp.take(dinv, dst) * jnp.take(dinv, src)
+        ss = dinv * dinv * mask
+        for i in range(cfg.n_gnn_blocks):
+            lp = p["gnn"][f"b{i}"]["lin"]
+            h = fused(h, edges, w, mask, w_neigh=lp["w"],
+                      bias=lp.get("b"), mode="sum", combine="pre",
+                      self_scale=ss, act="relu")
+    elif cfg.variant == "gin":
+        for i in range(cfg.n_gnn_blocks):
+            lp = p["gnn"][f"b{i}"]
+            m0, m1 = lp["mlp"]["l0"], lp["mlp"]["l1"]
+            r = fused(h, edges, edge_mask, None, w_neigh=m0["w"],
+                      bias=m0.get("b"), mode="sum", combine="pre",
+                      self_scale=1.0 + lp["eps"], act="relu")
+            h = jax.nn.relu((r @ m1["w"] + m1["b"]) * mask[:, None])
+    elif cfg.variant == "gat":
+        if cfg.use_pallas:
+            from ..kernels.ops import edge_softmax, fused_gat_aggregate
+        else:
+            from ..kernels.ref import (
+                edge_softmax_ref as edge_softmax,
+                fused_gat_aggregate_ref as fused_gat_aggregate)
+        n = x.shape[0]
+        src, dst = edges[:, 0], edges[:, 1]
+        for i in range(cfg.n_gnn_blocks):
+            lp = p["gnn"][f"b{i}"]
+            heads = lp["att_src"].shape[0]
+            z = nn.linear(lp["proj"], h)                # [P, D]
+            zh = z.reshape(n, heads, -1)
+            es = jnp.einsum("phd,hd->ph", zh, lp["att_src"])
+            ed = jnp.einsum("phd,hd->ph", zh, lp["att_dst"])
+            s = jax.nn.leaky_relu(
+                jnp.take(ed, dst, axis=0) + jnp.take(es, src, axis=0),
+                0.2)                                    # [Q, heads]
+            att = edge_softmax(s[None], dst[None], edge_mask[None], n)[0]
+            h = jax.nn.relu(
+                fused_gat_aggregate(z, edges, edge_mask, att, mask))
+    else:                                               # "mlp" baseline
+        for i in range(cfg.n_gnn_blocks):
+            lp = p["gnn"][f"b{i}"]
+            h = jax.nn.relu(nn.linear(lp["lin"], h) * mask[:, None])
+    return h
+
+
 def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
                 *, train: bool = False,
                 rng: Optional[jax.Array] = None) -> jnp.ndarray:
@@ -383,6 +508,11 @@ def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
     keeps graphs independent, and only the readout changes — a
     segment-mean/max pool over ``graph_ids`` instead of per-graph
     masked pooling.
+
+    When ``cfg.resolved_fused`` holds (packed layout, inference), the
+    GNN blocks run through :func:`_fused_mp_stack` instead — one fused
+    megakernel call per layer with no batch-of-one wrapping; training
+    keeps the composed path (dropout sits between the fused stages).
     """
     _, layer = _LAYERS[cfg.variant]
     layout = cfg.resolved_layout
@@ -414,20 +544,27 @@ def pmgns_apply(p: Params, cfg: PMGNSConfig, batch: Dict[str, jnp.ndarray],
                 "sparse_mp=True for edge-list batches")
         mask_mp = mask
         adj, edges, edge_mask = batch["adj"], None, None
-    h = x
-    for i in range(cfg.n_gnn_blocks):
-        h = layer(p["gnn"][f"b{i}"], h, adj, mask_mp, edges=edges,
-                  edge_mask=edge_mask, use_pallas=cfg.use_pallas)
-        h = jax.nn.relu(h)
-        if train and rng is not None:
-            rng, sub = jax.random.split(rng)
-            h = nn.dropout(sub, h, cfg.dropout, train)
-    if packed:
-        z = _readout_packed(h[0], batch["graph_ids"], mask,
+    if packed and cfg.resolved_fused and not train:
+        h_flat = _fused_mp_stack(p, cfg, batch["x"], mask,
+                                 batch["edges"], batch["edge_mask"])
+        z = _readout_packed(h_flat, batch["graph_ids"], mask,
                             batch["static"].shape[0], cfg.readout,
                             use_pallas=cfg.use_pallas)
     else:
-        z = _readout(h, mask, cfg.readout)             # node embedding z
+        h = x
+        for i in range(cfg.n_gnn_blocks):
+            h = layer(p["gnn"][f"b{i}"], h, adj, mask_mp, edges=edges,
+                      edge_mask=edge_mask, use_pallas=cfg.use_pallas)
+            h = jax.nn.relu(h)
+            if train and rng is not None:
+                rng, sub = jax.random.split(rng)
+                h = nn.dropout(sub, h, cfg.dropout, train)
+        if packed:
+            z = _readout_packed(h[0], batch["graph_ids"], mask,
+                                batch["static"].shape[0], cfg.readout,
+                                use_pallas=cfg.use_pallas)
+        else:
+            z = _readout(h, mask, cfg.readout)         # node embedding z
     feats = jnp.concatenate([z, batch["static"]], axis=-1)  # z ⊕ F_s
     y = feats
     for i in range(cfg.n_fc_blocks):
@@ -504,10 +641,17 @@ def make_staged_packed_infer_fn(cfg: PMGNSConfig, p: int, q: int, g: int,
         donate = jax.default_backend() not in ("cpu",)
     feat, sdim = cfg.node_feat_dim, cfg.static_dim
     o1, o2, o3, _, _ = packed_staging_layout(cfg, p, q, g)
+    # bf16 policy: the engine stages fbuf and holds params in bfloat16
+    # (half the transfer/parameter bytes); compute stays f32 — upcast
+    # here, inside the jitted function, so drift is storage rounding only
+    cast = cfg.resolved_precision != "f32"
 
     @partial(jax.jit, donate_argnums=(1, 2) if donate else ())
     def infer(params: Params, fbuf: jnp.ndarray,
               ibuf: jnp.ndarray) -> jnp.ndarray:
+        if cast:
+            params = nn.tree_cast(params, jnp.float32)
+            fbuf = fbuf.astype(jnp.float32)
         batch = {
             "x": fbuf[:o1].reshape(p, feat),
             "mask": fbuf[o1:o2],

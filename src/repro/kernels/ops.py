@@ -18,9 +18,15 @@ import jax
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
 from .sage_spmm import dense_aggregate_pallas, sage_aggregate_pallas
-from .segment_spmm import (edge_softmax_pallas, segment_aggregate_pallas,
+from .segment_spmm import (edge_softmax_pallas, fused_gat_aggregate_pallas,
+                           fused_mp_layer_pallas, segment_aggregate_pallas,
                            segment_readout_pallas, segment_scatter_pallas)
 from .ssd_scan import ssd_scan_pallas
+
+# the fused megakernel keeps a whole-[P, F] accumulator (plus a degree
+# accumulator for mean mode) resident in VMEM; past this budget fall back
+# to the reference composition rather than thrash
+_FUSED_VMEM_BUDGET = 10 * 2**20
 
 
 def _default_impl() -> str:
@@ -114,6 +120,57 @@ def edge_softmax(scores: jax.Array, dst: jax.Array, edge_mask: jax.Array,
         return edge_softmax_pallas(scores, dst, edge_mask, n_nodes,
                                    interpret=_interpret())
     return _ref.edge_softmax_ref(scores, dst, edge_mask, n_nodes)
+
+
+def _fused_fits(p: int, f: int, h: int, mode: str) -> bool:
+    """True if the fused megakernel's resident state fits the VMEM budget."""
+    pp = p + ((-p) % 128)
+    acc = pp * f * 4
+    deg = pp * 128 * 4 if mode == "mean" else 0
+    x = pp * f * 4
+    weights = 2 * f * h * 4
+    return acc + deg + x + weights <= _FUSED_VMEM_BUDGET
+
+
+def fused_mp_layer(x: jax.Array, edges: jax.Array, edge_mask: jax.Array,
+                   node_mask: Optional[jax.Array] = None, *,
+                   w_neigh: jax.Array, w_self: Optional[jax.Array] = None,
+                   bias: Optional[jax.Array] = None, mode: str = "mean",
+                   combine: str = "split",
+                   self_scale: Optional[jax.Array] = None,
+                   act: str = "relu",
+                   impl: Optional[str] = None) -> jax.Array:
+    """One fused message-passing layer over the packed flat node axis.
+
+    gather → edge-mask → scatter(+mean) → self/neighbor combine → bias →
+    activation → node-mask in a single kernel — see ``segment_spmm``.
+    Falls back to the reference composition when the whole-``[P, F]``
+    VMEM accumulator would blow the budget.
+    """
+    impl = impl or _default_impl()
+    if impl == "pallas" and _fused_fits(x.shape[0], x.shape[1],
+                                        w_neigh.shape[1], mode):
+        return fused_mp_layer_pallas(
+            x, edges, edge_mask, node_mask, w_neigh=w_neigh, w_self=w_self,
+            bias=bias, mode=mode, combine=combine, self_scale=self_scale,
+            act=act, interpret=_interpret())
+    return _ref.fused_mp_layer_ref(
+        x, edges, edge_mask, node_mask, w_neigh=w_neigh, w_self=w_self,
+        bias=bias, mode=mode, combine=combine, self_scale=self_scale,
+        act=act)
+
+
+def fused_gat_aggregate(z: jax.Array, edges: jax.Array,
+                        edge_mask: jax.Array, att: jax.Array,
+                        node_mask: jax.Array,
+                        impl: Optional[str] = None) -> jax.Array:
+    """Fused GAT post-softmax gather⊙attention→scatter — see ``segment_spmm``."""
+    impl = impl or _default_impl()
+    if impl == "pallas" and _fused_fits(z.shape[0], z.shape[1],
+                                        z.shape[1], "sum"):
+        return fused_gat_aggregate_pallas(z, edges, edge_mask, att,
+                                          node_mask, interpret=_interpret())
+    return _ref.fused_gat_aggregate_ref(z, edges, edge_mask, att, node_mask)
 
 
 def flash_attention(q, k, v, *, causal: bool = False,

@@ -135,6 +135,82 @@ def edge_softmax_ref(scores: jax.Array, dst: jax.Array,
             ).astype(scores.dtype)
 
 
+def fused_mp_layer_ref(x: jax.Array, edges: jax.Array, edge_mask: jax.Array,
+                       node_mask: jax.Array | None = None, *,
+                       w_neigh: jax.Array, w_self: jax.Array | None = None,
+                       bias: jax.Array | None = None, mode: str = "mean",
+                       combine: str = "split",
+                       self_scale: jax.Array | None = None,
+                       act: str = "relu") -> jax.Array:
+    """One full message-passing layer over the packed flat node axis.
+
+    gather → mask → segment-scatter(+mean) → combine-with-self →
+    bias → activation → node-mask, as a single function so the Pallas
+    megakernel has a one-call oracle.
+
+    x: [P, F] flat packed node features; edges: [Q, 2] int32 globally
+    offset (src, dst); edge_mask: [Q] — may carry real-valued edge
+    weights (GCN normalization), not just {0,1}; node_mask: [P] or None.
+
+    ``combine="split"`` computes ``x @ w_self + agg @ w_neigh``
+    (GraphSAGE). ``combine="pre"`` computes
+    ``(self_scale * x + agg) @ w_neigh`` where ``self_scale`` is a
+    scalar (GIN's ``1 + eps``) or a [P] vector (GCN's ``d̂⁻¹·d̂⁻¹``
+    self-loop term); ``w_self`` is ignored. Returns [P, H].
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
+    if combine not in ("split", "pre"):
+        raise ValueError(f"combine must be 'split' or 'pre', got {combine!r}")
+    if act not in ("relu", "none"):
+        raise ValueError(f"act must be 'relu' or 'none', got {act!r}")
+    p = x.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    msgs = jnp.take(x, src, axis=0) * edge_mask[:, None]
+    agg = jax.ops.segment_sum(msgs, dst, num_segments=p)
+    if mode == "mean":
+        deg = jax.ops.segment_sum(edge_mask, dst, num_segments=p)
+        agg = agg / jnp.maximum(deg, 1.0)[:, None]
+    if combine == "split":
+        if w_self is None:
+            raise ValueError("combine='split' requires w_self")
+        y = x @ w_self + agg @ w_neigh
+    else:
+        s = jnp.asarray(1.0 if self_scale is None else self_scale,
+                        dtype=x.dtype)
+        if s.ndim == 1:
+            s = s[:, None]
+        y = (s * x + agg) @ w_neigh
+    if bias is not None:
+        y = y + bias
+    if act == "relu":
+        y = jax.nn.relu(y)
+    if node_mask is not None:
+        y = y * node_mask[:, None]
+    return y.astype(x.dtype)
+
+
+def fused_gat_aggregate_ref(z: jax.Array, edges: jax.Array,
+                            edge_mask: jax.Array, att: jax.Array,
+                            node_mask: jax.Array) -> jax.Array:
+    """Fused GAT post-softmax stage: gather ⊙ per-head attention → scatter.
+
+    z: [P, D] projected node features (D = H·dh, heads concatenated);
+    edges: [Q, 2] int32; edge_mask: [Q]; att: [Q, H] per-edge attention
+    weights (already softmax-normalized per destination); node_mask: [P].
+    Returns [P, D] — ``out[i] = Σ_{e: dst_e=i} m_e · α_e[h] ⊙ z[src_e]``
+    with each head's attention broadcast over its dh-slice.
+    """
+    p, d = z.shape
+    h = att.shape[1]
+    src, dst = edges[:, 0], edges[:, 1]
+    zs = jnp.take(z, src, axis=0)
+    msgs = (zs.reshape(-1, h, d // h) * att[:, :, None]).reshape(-1, d)
+    out = jax.ops.segment_sum(msgs * edge_mask[:, None], dst,
+                              num_segments=p)
+    return (out * node_mask[:, None]).astype(z.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, scale: float | None = None,
                   window: int = 0, q_offset: int = 0) -> jax.Array:

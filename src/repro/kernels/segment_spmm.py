@@ -45,6 +45,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _DEG_LANES = 128   # degree accumulator lane width (TPU min lane tile)
 
@@ -293,6 +294,265 @@ def segment_readout_pallas(h: jax.Array, graph_ids: jax.Array,
         return mean.astype(h.dtype)
     mx = jnp.where(cnt > 0, mx, 0.0)
     return jnp.concatenate([mean, mx], axis=-1).astype(h.dtype)
+
+
+def _fused_mp_kernel(src_ref, dst_ref, em_ref, nm_ref, ss_ref, x_ref,
+                     wn_ref, ws_ref, b_ref, o_ref, acc_ref, *deg_scratch,
+                     ke: int, bn: int, mode: str, combine: str, act: str):
+    """One message-passing layer as a single phased grid.
+
+    The grid is ``(ke + kn,)``: iterations ``t < ke`` are the **edge
+    phase** (one-hot gather → mask → one-hot scatter into a whole-
+    ``[Pp, F]`` VMEM scratch accumulator, plus a degree accumulator for
+    ``mode="mean"``); iterations ``t >= ke`` are the **node phase**
+    (slice the accumulator, divide by degree, combine with the self
+    term, bias, activation, node mask, write one output tile). The
+    features never round-trip HBM between stages — that is the entire
+    point of the fusion.
+    """
+    t = pl.program_id(0)
+    p_pad = acc_ref.shape[0]
+    deg_ref = deg_scratch[0] if deg_scratch else None
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if deg_ref is not None:
+            deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    @pl.when(t < ke)
+    def _edge_phase():
+        src = src_ref[0]                                # [be] int32
+        dst = dst_ref[0]                                # [be]
+        em = em_ref[0]                                  # [be]
+        x = x_ref[...]                                  # [Pp, F]
+        be = src.shape[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (be, p_pad), 1)
+        oh_src = (src[:, None] == cols).astype(x.dtype)  # [be, Pp]
+        msgs = jnp.dot(oh_src, x, preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (p_pad, be), 0)
+        oh_dst = (dst[None, :] == rows).astype(x.dtype) * em[None, :]
+        acc_ref[...] += jnp.dot(
+            oh_dst, msgs,
+            preferred_element_type=jnp.float32).astype(acc_ref.dtype)
+        if deg_ref is not None:
+            d = jnp.sum(oh_dst, axis=1)                 # [Pp]
+            deg_ref[...] += jnp.broadcast_to(
+                d[:, None], (p_pad, _DEG_LANES)).astype(deg_ref.dtype)
+
+    @pl.when(t >= ke)
+    def _node_phase():
+        i = t - ke
+        sl = pl.ds(i * bn, bn)
+        x_t = x_ref[sl, :]                              # [bn, F]
+        agg = acc_ref[sl, :]                            # [bn, H-in == F]
+        if deg_ref is not None:
+            dg = deg_ref[sl, :][:, :1]                  # [bn, 1]
+            agg = agg / jnp.maximum(dg, 1.0)
+        if combine == "split":
+            y = (jnp.dot(x_t, ws_ref[...],
+                         preferred_element_type=jnp.float32)
+                 + jnp.dot(agg, wn_ref[...],
+                           preferred_element_type=jnp.float32))
+        else:                                           # "pre"
+            s = ss_ref[0, sl][:, None]                  # [bn, 1]
+            y = jnp.dot(s * x_t + agg, wn_ref[...],
+                        preferred_element_type=jnp.float32)
+        y = y + b_ref[0]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        y = y * nm_ref[0, sl][:, None]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "combine", "act", "bn",
+                                             "be", "interpret"))
+def fused_mp_layer_pallas(x: jax.Array, edges: jax.Array,
+                          edge_mask: jax.Array,
+                          node_mask: jax.Array | None = None, *,
+                          w_neigh: jax.Array,
+                          w_self: jax.Array | None = None,
+                          bias: jax.Array | None = None,
+                          mode: str = "mean", combine: str = "split",
+                          self_scale: jax.Array | None = None,
+                          act: str = "relu", bn: int = 128, be: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """Fused message-passing megakernel over the packed flat node axis.
+
+    One ``pallas_call`` covers gather → edge-mask → scatter-accumulate
+    (→ mean) → self/neighbor combine → bias → activation → node mask;
+    semantics are exactly :func:`repro.kernels.ref.fused_mp_layer_ref`.
+    x: [P, F]; edges: [Q, 2] int32 globally offset; edge_mask: [Q]
+    (may carry GCN edge weights); node_mask: [P] or None. Returns
+    [P, H] where H = ``w_neigh.shape[1]``.
+    """
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
+    if combine not in ("split", "pre"):
+        raise ValueError(f"combine must be 'split' or 'pre', got {combine!r}")
+    if act not in ("relu", "none"):
+        raise ValueError(f"act must be 'relu' or 'none', got {act!r}")
+    if combine == "split" and w_self is None:
+        raise ValueError("combine='split' requires w_self")
+    P, F = x.shape
+    H = w_neigh.shape[1]
+    Q = edges.shape[0]
+    bn = min(bn, max(P, 1))
+    be = min(be, max(Q, 1))
+    pp = (-P) % bn
+    # always pad the edge axis to ≥ one full tile so ke ≥ 1 (an edgeless
+    # packed bin still flows through the same phased grid)
+    Qp = max(be, Q + ((-Q) % be))
+
+    src = jnp.pad(edges[:, 0].astype(jnp.int32), (0, Qp - Q))
+    dst = jnp.pad(edges[:, 1].astype(jnp.int32), (0, Qp - Q))
+    em = jnp.pad(edge_mask.astype(x.dtype), (0, Qp - Q))
+    nm = (jnp.ones((P,), x.dtype) if node_mask is None
+          else node_mask.astype(x.dtype))
+    ss = jnp.broadcast_to(
+        jnp.asarray(1.0 if self_scale is None else self_scale,
+                    x.dtype), (P,))
+    ws = (jnp.zeros_like(w_neigh) if w_self is None
+          else w_self.astype(x.dtype))
+    b = (jnp.zeros((H,), x.dtype) if bias is None
+         else bias.astype(x.dtype))
+    if pp:
+        x = jnp.pad(x, ((0, pp), (0, 0)))
+        nm = jnp.pad(nm, (0, pp))                       # masked → zero rows
+        ss = jnp.pad(ss, (0, pp), constant_values=1.0)
+    Pp = P + pp
+    ke = Qp // be
+    kn = Pp // bn
+
+    scratch = [pltpu.VMEM((Pp, F), jnp.float32)]
+    if mode == "mean":
+        scratch.append(pltpu.VMEM((Pp, _DEG_LANES), jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_fused_mp_kernel, ke=ke, bn=bn, mode=mode,
+                          combine=combine, act=act),
+        grid=(ke + kn,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, Pp), lambda t: (0, 0)),
+            pl.BlockSpec((1, Pp), lambda t: (0, 0)),
+            pl.BlockSpec((Pp, F), lambda t: (0, 0)),
+            pl.BlockSpec((F, H), lambda t: (0, 0)),
+            pl.BlockSpec((F, H), lambda t: (0, 0)),
+            pl.BlockSpec((1, H), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, H),
+                               lambda t: (jnp.maximum(t - ke, 0), 0)),
+        out_shape=jax.ShapeDtypeStruct((Pp, H), x.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(src[None], dst[None], em[None], nm[None], ss[None], x, w_neigh, ws,
+      b[None])
+    return out[:P].astype(x.dtype)
+
+
+def _fused_gat_kernel(src_ref, dst_ref, em_ref, nm_ref, z_ref, att_ref,
+                      o_ref, acc_ref, *, ke: int, bn: int, dh: int):
+    """Fused GAT aggregate: gather ⊙ head-broadcast attention → scatter.
+
+    Same phased-grid shape as :func:`_fused_mp_kernel`. The per-head
+    attention ``[be, H]`` is broadcast over each head's ``dh``-wide
+    feature slice via an in-kernel one-hot expansion matmul
+    ``expand[h, d] = (d // dh == h)`` — MXU-native, no vector gather.
+    """
+    t = pl.program_id(0)
+    p_pad, d_full = acc_ref.shape
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t < ke)
+    def _edge_phase():
+        src = src_ref[0]                                # [be]
+        dst = dst_ref[0]                                # [be]
+        em = em_ref[0]                                  # [be]
+        z = z_ref[...]                                  # [Pp, D]
+        att = att_ref[...]                              # [be, Hp]
+        be = src.shape[0]
+        hp = att.shape[1]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (be, p_pad), 1)
+        oh_src = (src[:, None] == cols).astype(z.dtype)
+        zs = jnp.dot(oh_src, z, preferred_element_type=jnp.float32)
+        h_rows = jax.lax.broadcasted_iota(jnp.int32, (hp, d_full), 0)
+        d_cols = jax.lax.broadcasted_iota(jnp.int32, (hp, d_full), 1)
+        expand = (d_cols // dh == h_rows).astype(z.dtype)   # [Hp, D]
+        msgs = zs * jnp.dot(att, expand,
+                            preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (p_pad, be), 0)
+        oh_dst = (dst[None, :] == rows).astype(z.dtype) * em[None, :]
+        acc_ref[...] += jnp.dot(
+            oh_dst, msgs,
+            preferred_element_type=jnp.float32).astype(acc_ref.dtype)
+
+    @pl.when(t >= ke)
+    def _node_phase():
+        i = t - ke
+        sl = pl.ds(i * bn, bn)
+        o_ref[...] = (acc_ref[sl, :]
+                      * nm_ref[0, sl][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "be", "interpret"))
+def fused_gat_aggregate_pallas(z: jax.Array, edges: jax.Array,
+                               edge_mask: jax.Array, att: jax.Array,
+                               node_mask: jax.Array, *, bn: int = 128,
+                               be: int = 128,
+                               interpret: bool = True) -> jax.Array:
+    """Fused GAT post-softmax stage over the packed flat node axis.
+
+    z: [P, D] projected features (heads concatenated, D = H·dh);
+    edges: [Q, 2]; edge_mask: [Q]; att: [Q, H] softmax-normalized
+    attention; node_mask: [P]. Oracle:
+    :func:`repro.kernels.ref.fused_gat_aggregate_ref`.
+    """
+    P, D = z.shape
+    Q, H = att.shape
+    if D % H:
+        raise ValueError(f"head count {H} must divide feature dim {D}")
+    bn = min(bn, max(P, 1))
+    be = min(be, max(Q, 1))
+    pp = (-P) % bn
+    ph = (-H) % 8                     # f32 sublane multiple
+    Qp = max(be, Q + ((-Q) % be))
+
+    src = jnp.pad(edges[:, 0].astype(jnp.int32), (0, Qp - Q))
+    dst = jnp.pad(edges[:, 1].astype(jnp.int32), (0, Qp - Q))
+    em = jnp.pad(edge_mask.astype(z.dtype), (0, Qp - Q))
+    a = jnp.pad(att.astype(z.dtype), ((0, Qp - Q), (0, ph)))
+    nm = node_mask.astype(z.dtype)
+    if pp:
+        z = jnp.pad(z, ((0, pp), (0, 0)))
+        nm = jnp.pad(nm, (0, pp))
+    Pp = P + pp
+    Hp = H + ph
+    ke = Qp // be
+    kn = Pp // bn
+
+    out = pl.pallas_call(
+        functools.partial(_fused_gat_kernel, ke=ke, bn=bn, dh=D // H),
+        grid=(ke + kn,),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, be), lambda t: (0, jnp.minimum(t, ke - 1))),
+            pl.BlockSpec((1, Pp), lambda t: (0, 0)),
+            pl.BlockSpec((Pp, D), lambda t: (0, 0)),
+            pl.BlockSpec((be, Hp), lambda t: (jnp.minimum(t, ke - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, D),
+                               lambda t: (jnp.maximum(t - ke, 0), 0)),
+        out_shape=jax.ShapeDtypeStruct((Pp, D), z.dtype),
+        scratch_shapes=[pltpu.VMEM((Pp, D), jnp.float32)],
+        interpret=interpret,
+    )(src[None], dst[None], em[None], nm[None], z, a)
+    return out[:P].astype(z.dtype)
 
 
 def _softmax_stats_kernel(s_ref, dst_ref, em_ref, m_ref, d_ref, *,

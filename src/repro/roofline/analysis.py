@@ -71,6 +71,20 @@ class Hardware:
 V5E = Hardware("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
                hbm_bytes=16e9)
 
+#: Nominal envelope for the CPU container the benchmarks run in — a
+#: conventional reference point (≈ a few AVX cores + dual-channel DDR),
+#: NOT a measured machine. Achieved-rate percentages against it are for
+#: *relative* comparison across kernels/runs on the same host; absolute
+#: %-of-peak is only meaningful on a real accelerator target.
+CPU_HOST = Hardware("cpu-host-nominal", peak_flops=2.0e11, hbm_bw=5.0e10,
+                    link_bw=1.0e9, hbm_bytes=8e9)
+
+
+def default_hardware() -> Hardware:
+    """The roofline envelope for the current jax backend."""
+    import jax
+    return V5E if jax.default_backend() == "tpu" else CPU_HOST
+
 
 @dataclasses.dataclass
 class RooflineReport:
@@ -340,3 +354,119 @@ def roofline_terms(report: RooflineReport) -> Dict[str, float]:
     return {"compute_s": report.compute_s, "memory_s": report.memory_s,
             "collective_s": report.collective_s,
             "dominant": report.dominant}
+
+
+# ---------------------------------------------------------------------------
+# analytic per-kernel traffic models (benchmarks)
+# ---------------------------------------------------------------------------
+# Counting convention: one HBM read per operand, one write per result,
+# per *stage* — fused stages keep intermediates on-chip and therefore
+# drop the inter-stage round-trips. f32 elements are 4 bytes; an edge
+# row is 2×int32 = 8 bytes. These are deterministic models, not
+# measurements: benchmarks use them for fused-vs-unfused traffic ratios
+# (machine-independent) and to convert measured wall time into achieved
+# GB/s / %-of-roofline rows.
+
+def mp_layer_traffic(p: int, q: int, f: int, h: int, *, mode: str = "mean",
+                     combine: str = "split",
+                     fused: bool = False) -> Dict[str, float]:
+    """FLOPs + HBM bytes of one packed message-passing layer.
+
+    Unfused = the composed per-op pipeline (gather → mask → scatter
+    [→ degree → mean] → combine → bias/act/node-mask), each stage
+    round-tripping its intermediate through HBM. Fused = the megakernel:
+    inputs read once, output written once, everything else in VMEM.
+    """
+    nw = 2 if combine == "split" else 1      # weight matmuls in combine
+    flops = 2.0 * q * f                      # scatter-accumulate MACs
+    flops += 2.0 * p * f * h * nw            # combine matmul(s)
+    flops += p * h                           # bias + activation
+    if mode == "mean":
+        flops += p * f                       # degree divide
+    weights = f * h * nw + h
+    if fused:
+        elems = (p * f                       # x, read once
+                 + q                         # edge_mask
+                 + 2 * p                     # node mask + self-scale
+                 + weights
+                 + p * h)                    # output, written once
+        byts = 4.0 * elems + 8.0 * q         # + edges (2×int32)
+    else:
+        elems = (p * f + q * f               # gather: read x, write msgs
+                 + 2.0 * q * f               # mask: rewrite msgs
+                 + q * f + p * f             # scatter: read msgs, write agg
+                 + 2.0 * p * f + p           # combine reads x + agg (+ss)
+                 + weights + p * h           # weights, write y
+                 + 2.0 * p * h + p)          # act+mask rewrite
+        if mode == "mean":
+            elems += (q + p                  # degree pass
+                      + 2.0 * p * f + p)     # mean divide rewrite
+        byts = 4.0 * elems + 8.0 * q
+    return {"flops": flops, "bytes": byts}
+
+
+def segment_aggregate_traffic(b: int, e: int, n: int, f: int, *,
+                              mode: str = "mean") -> Dict[str, float]:
+    """Two-pass sparse aggregation: gather writes ``[E, F]`` messages,
+    scatter reads them back — per batch row, ×``b``."""
+    flops = b * (2.0 * e * f + (n * f if mode == "mean" else 0.0))
+    elems = b * (n * f + e * f               # gather: read h, write msgs
+                 + e + e * f + n * f         # scatter: mask, msgs, out
+                 + (e + n if mode == "mean" else 0))
+    return {"flops": flops, "bytes": 4.0 * elems + 8.0 * b * e}
+
+
+def segment_readout_traffic(p: int, f: int, g: int, *,
+                            kind: str = "mean_max") -> Dict[str, float]:
+    """Fused segment mean/max readout over the packed flat node axis."""
+    out_f = 2 * f if kind == "mean_max" else f
+    flops = 2.0 * p * f + g * f              # sum+max sweep, mean divide
+    elems = p * f + 2.0 * p + g * out_f + g  # h, ids+mask, out, counts
+    return {"flops": flops, "bytes": 4.0 * elems}
+
+
+def edge_softmax_traffic(b: int, e: int, h: int, n: int) -> Dict[str, float]:
+    """Two-pass online edge softmax: stats pass + normalize pass."""
+    flops = b * 5.0 * e * h                  # exp, sub, mul, div, max
+    elems = b * (2.0 * e * h                 # scores read twice (2 passes)
+                 + 2.0 * e                   # dst + mask (per pass, int/f32)
+                 + 2.0 * n * h               # write (max, denom)
+                 + 2.0 * n * h               # read them back
+                 + e * h)                    # output
+    return {"flops": flops, "bytes": 4.0 * elems}
+
+
+def dense_aggregate_traffic(b: int, n: int, f: int) -> Dict[str, float]:
+    """Dense-adjacency aggregation — the O(N²) path the sparse kernels
+    replace (kept for microbench comparison rows)."""
+    flops = 2.0 * b * n * n * f
+    elems = b * (n * n + 2.0 * n * f)
+    return {"flops": flops, "bytes": 4.0 * elems}
+
+
+def achieved_rates(flops: float, byts: float, wall_s: float,
+                   hw: Optional[Hardware] = None) -> Dict[str, object]:
+    """Measured wall time + modeled (FLOPs, bytes) → achieved-rate row.
+
+    ``pct_of_roofline`` is the fraction of the wall time explained by
+    the binding roofline term — 100 % means the kernel runs at the
+    envelope's speed-of-light for its arithmetic intensity; low values
+    mean overhead (dispatch, interpret mode) dominates. Against
+    :data:`CPU_HOST` the absolute number is nominal (see its docstring);
+    the fused-vs-unfused *ratio* is the machine-independent signal.
+    """
+    hw = hw or default_hardware()
+    wall = max(float(wall_s), 1e-12)
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    return {
+        "hardware": hw.name,
+        "flops": float(flops),
+        "bytes": float(byts),
+        "achieved_gflops": flops / wall / 1e9,
+        "achieved_gb_s": byts / wall / 1e9,
+        "pct_peak_flops": 100.0 * (flops / wall) / hw.peak_flops,
+        "pct_peak_bw": 100.0 * (byts / wall) / hw.hbm_bw,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "pct_of_roofline": 100.0 * max(compute_s, memory_s) / wall,
+    }

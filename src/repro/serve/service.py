@@ -100,6 +100,11 @@ class ServeStats:
     padding_waste_frac: float = 0.0
     latency_ms_p50: float = 0.0
     latency_ms_p99: float = 0.0
+    #: Engine inference precision policy (``f32`` | ``bf16`` |
+    #: ``int8-weights``) and the bf16-vs-f32 max-abs prediction delta
+    #: measured at warmup (``None`` unless the engine warmed up in bf16).
+    precision: str = "f32"
+    bf16_max_abs_delta: Optional[float] = None
 
 
 class PredictionService:
@@ -295,6 +300,8 @@ class PredictionService:
                 queue_peak=self._queue.peak_depth,
                 batch_occupancy=round(occupancy, 3),
                 padding_waste_frac=self.engine.stats.padding_waste_frac,
+                precision=self.engine.stats.precision,
+                bf16_max_abs_delta=self.engine.stats.bf16_max_abs_delta,
                 latency_ms_p50=float(np.percentile(lat, 50))
                 if lat.size else 0.0,
                 latency_ms_p99=float(np.percentile(lat, 99))

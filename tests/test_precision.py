@@ -1,0 +1,151 @@
+"""Inference precision policies: config plumbing, engine stats, and the
+v3 artifact encodings (bf16 bit-view, int8 + per-row scales)."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import PredictionEngine
+from repro.core.gnn import PMGNSConfig, pmgns_init
+from repro.dataset.builder import synthetic_samples
+from repro.serve.artifact import (ARTIFACT_VERSION, load_artifact,
+                                  save_artifact)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = PMGNSConfig(hidden=16, layout="packed")
+    return pmgns_init(jax.random.PRNGKey(0), cfg), cfg
+
+
+def test_precision_validation():
+    assert PMGNSConfig().resolved_precision == "f32"
+    assert PMGNSConfig(precision="bf16").resolved_precision == "bf16"
+    with pytest.raises(ValueError):
+        PMGNSConfig(precision="fp8").resolved_precision
+    with pytest.raises(ValueError):
+        save_artifact("/tmp/never-written.npz", {}, PMGNSConfig(),
+                      precision="fp8")
+
+
+def test_engine_bf16_stats_and_drift(trained):
+    params, cfg32 = trained
+    samples = synthetic_samples(12, seed=0, n_min=4, n_max=24)
+    cfg16 = dataclasses.replace(cfg32, precision="bf16")
+    e32 = PredictionEngine(params, cfg32)
+    e16 = PredictionEngine(params, cfg16)
+    e16.warmup()
+    assert e16.stats.precision == "bf16"
+    assert e16.stats.bf16_max_abs_delta is not None
+    assert np.isfinite(e16.stats.bf16_max_abs_delta)
+    assert e32.stats.precision == "f32"
+    assert e32.stats.bf16_max_abs_delta is None
+    y32 = e32.predict_samples(samples)
+    y16 = e16.predict_samples(samples)
+    # staging-only rounding: close but not bitwise
+    assert np.all(np.isfinite(y16))
+    np.testing.assert_allclose(y16, y32, rtol=0.05, atol=0.05)
+
+
+def test_serve_stats_carry_precision(trained):
+    params, cfg32 = trained
+    from repro.serve.service import PredictionService
+    cfg16 = dataclasses.replace(cfg32, precision="bf16")
+    eng = PredictionEngine(params, cfg16)
+    eng.warmup()
+    with PredictionService(engine=eng) as svc:
+        st = svc.stats
+        assert st.precision == "bf16"
+        assert st.bf16_max_abs_delta is not None
+
+
+def test_artifact_bf16_encoding_round_trip(trained, tmp_path):
+    import ml_dtypes
+    params, cfg = trained
+    p32 = str(tmp_path / "f32.npz")
+    p16 = str(tmp_path / "bf16.npz")
+    save_artifact(p32, params, cfg, precision="f32")
+    save_artifact(p16, params, cfg, precision="bf16")
+    # weights halve; the fixed JSON header keeps the tiny-model ratio
+    # above the asymptotic 0.5
+    assert os.path.getsize(p16) < 0.75 * os.path.getsize(p32)
+    # stored as uint16 bit views, loadable without pickle
+    with np.load(p16, allow_pickle=False) as z:
+        key = "params/gnn/b0/self/w"
+        assert z[key].dtype == np.uint16
+    loaded, lcfg, _ = load_artifact(p16)
+    w = np.asarray(params["gnn"]["b0"]["self"]["w"])
+    exp = w.astype(ml_dtypes.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(loaded["gnn"]["b0"]["self"]["w"], exp)
+    assert lcfg.hidden == cfg.hidden
+
+
+def test_artifact_int8_encoding_round_trip(trained, tmp_path):
+    from repro.runtime.compression import int8_compress, int8_decompress
+    params, cfg = trained
+    path = str(tmp_path / "int8.npz")
+    save_artifact(path, params, cfg, precision="int8-weights")
+    with np.load(path, allow_pickle=False) as z:
+        key = "params/gnn/b0/self/w"
+        assert z[key].dtype == np.int8
+        assert key + "::scale" in z.files
+        # 1-D leaves (biases) stay f32 verbatim
+        bkey = "params/gnn/b0/self/b"
+        if bkey in z.files:
+            assert z[bkey].dtype == np.float32
+    loaded, _, _ = load_artifact(path)
+    w = np.asarray(params["gnn"]["b0"]["self"]["w"])
+    q, s = int8_compress(w)
+    np.testing.assert_allclose(loaded["gnn"]["b0"]["self"]["w"],
+                               np.asarray(int8_decompress(q, s)),
+                               atol=0.0)
+
+
+def test_artifact_precision_defaults_from_cfg(trained, tmp_path):
+    params, cfg = trained
+    cfg8 = dataclasses.replace(cfg, precision="int8-weights")
+    path = str(tmp_path / "default.npz")
+    save_artifact(path, params, cfg8)
+    with np.load(path, allow_pickle=False) as z:
+        import json
+        doc = json.loads(bytes(z["__dippm_artifact__"]).decode("utf-8"))
+    assert doc["precision"] == "int8-weights"
+    assert doc["schema_version"] == ARTIFACT_VERSION
+
+
+def test_v2_artifact_without_encodings_still_loads(trained, tmp_path):
+    # a v2-era file: schema_version 2, manifest entries with no
+    # "encoding" key — must load byte-for-byte
+    import json
+    params, cfg = trained
+    path = str(tmp_path / "v2.npz")
+    save_artifact(path, params, cfg, precision="f32")
+    with np.load(path, allow_pickle=False) as z:
+        doc = json.loads(bytes(z["__dippm_artifact__"]).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != "__dippm_artifact__"}
+    doc["schema_version"] = 2
+    for spec in doc["params"].values():
+        spec.pop("encoding", None)
+    header = np.frombuffer(json.dumps(doc).encode("utf-8"), dtype=np.uint8)
+    with open(path, "wb") as f:
+        np.savez(f, __dippm_artifact__=header, **arrays)
+    loaded, _, _ = load_artifact(path)
+    np.testing.assert_array_equal(loaded["gnn"]["b0"]["self"]["w"],
+                                  np.asarray(params["gnn"]["b0"]["self"]["w"]))
+
+
+def test_bf16_engine_from_loaded_artifact(trained, tmp_path):
+    # the runtime-bf16 deployment shape: cfg carries precision="bf16",
+    # weights stored f32 — the loaded engine stages in bf16
+    params, cfg = trained
+    cfg16 = dataclasses.replace(cfg, precision="bf16")
+    path = str(tmp_path / "bf16_runtime.npz")
+    save_artifact(path, params, cfg16, precision="f32")
+    pl, cl, _ = load_artifact(path)
+    assert cl.precision == "bf16"
+    eng = PredictionEngine(pl, cl)
+    assert eng.stats.precision == "bf16"
+    y = eng.predict_samples(synthetic_samples(4, seed=1, n_min=4, n_max=16))
+    assert np.all(np.isfinite(y))
