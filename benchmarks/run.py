@@ -26,8 +26,8 @@ def main() -> None:
 
     from . import (engine_throughput, fig3_mig_memory, fig4_scatter,
                    fused_mp, microbench, packed_batching, roofline_report,
-                   serving_latency, sparse_mp, table2_dataset, table4_gnn,
-                   table5_mig, train_throughput)
+                   serving_fleet, serving_latency, sparse_mp, table2_dataset,
+                   table4_gnn, table5_mig, train_throughput)
 
     jobs = {
         "microbench": lambda: microbench.run(),
@@ -37,6 +37,7 @@ def main() -> None:
         "packed_batching": lambda: packed_batching.run(),
         "fused_mp": lambda: fused_mp.run(),
         "serving_latency": lambda: serving_latency.run(),
+        "serving_fleet": lambda: serving_fleet.run(),
         "table2": lambda: table2_dataset.run(n_graphs=n_graphs),
         "table4": lambda: table4_gnn.run(n_graphs=n_graphs, epochs=epochs),
         "table5": lambda: table5_mig.run(n_graphs=n_graphs,

@@ -7,7 +7,10 @@ variant and submits — exactly the shape of design-space-exploration
 traffic hitting a shared predictor). Prints per-request latency and the
 final :class:`~repro.serve.ServeStats`: watch ``batch_occupancy`` — the
 micro-batcher coalesces the burst into a handful of packed bins instead
-of one device dispatch per request.
+of one device dispatch per request. A second pass re-submits the same
+variants to show the content-addressed prediction cache: every
+duplicate resolves from the fingerprint LRU (``cache_hits``) without
+touching the engine, bit-equal to the first pass.
 
     PYTHONPATH=src python examples/serve_requests.py
 """
@@ -62,12 +65,29 @@ def main():
             print(f"{name:<38}{pred.latency_ms:>8.2f}ms"
                   f"{pred.memory_mb:>9.1f}MB{fut.latency_ms:>9.1f}ms")
 
+        # duplicate traffic: the design-space explorer re-queries the
+        # same variants — all of them resolve from the prediction cache
+        print(f"\n== re-submitting all {len(graphs)} variants "
+              f"(duplicates) ==")
+        dup = [svc.submit(g) for g in graphs]
+        svc.flush()
+        for (_, first, _), fut in zip(results, dup):
+            again = fut.result(timeout=120)
+            assert again.latency_ms == first.latency_ms  # bit-equal hit
+
         s = svc.stats
         print(f"\n== ServeStats ==")
         print(f"requests : {s.completed} completed / {s.submitted} "
-              f"submitted (peak queue depth {s.queue_peak})")
+              f"submitted (peak queue depth {s.queue_peak}, "
+              f"shed {s.shed_count})")
         print(f"batching : {s.batches} drains, {s.bins} device bins, "
               f"occupancy {s.batch_occupancy:.1f} graphs/drain")
+        print(f"cache    : {s.cache_hits} hits + {s.cache_coalesced} "
+              f"coalesced / {s.cache_misses} misses "
+              f"(hit rate {s.hit_rate:.1%}, {s.cache_entries} entries)")
+        print(f"fleet    : {s.replicas} replica(s)"
+              + (f", bins per replica {list(s.replica_bins)}, "
+                 f"requeues {s.requeues}" if s.replicas > 1 else ""))
         print(f"padding  : {s.padding_waste_frac:.1%} of device node rows")
         print(f"latency  : p50 {s.latency_ms_p50:.1f} ms, "
               f"p99 {s.latency_ms_p99:.1f} ms")

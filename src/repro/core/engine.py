@@ -138,12 +138,17 @@ class PredictionEngine:
     keyed on ``(node_bucket, batch_bucket)``. :meth:`run_bin` — the
     single device-dispatch entry shared by :meth:`predict_samples` and
     the serving micro-batcher (``repro.serve``) — is **thread-safe**: an
-    internal lock serializes staging + stats + the compiled-shape
-    bookkeeping, so any number of threads may feed one engine.
+    internal lock guards the stats counters and compiled-shape
+    bookkeeping only, while staging (thread-local buffers) and the
+    jitted device call run unlocked, so concurrent callers — and the
+    replica workers of a serving fleet — execute bins in parallel.
+    ``device=`` binds the engine (params + every jitted apply) to one
+    jax device.
     """
 
     def __init__(self, params, cfg: PMGNSConfig,
-                 engine_cfg: EngineConfig = EngineConfig()):
+                 engine_cfg: EngineConfig = EngineConfig(), *,
+                 device=None):
         feat_dim = (STATIC_FEATURE_DIM_EXT if engine_cfg.extended_static
                     else STATIC_FEATURE_DIM)
         if cfg.static_dim != feat_dim:
@@ -151,6 +156,15 @@ class PredictionEngine:
                 f"extended_static={engine_cfg.extended_static} produces "
                 f"{feat_dim}-dim static features but the model was built "
                 f"with PMGNSConfig(static_dim={cfg.static_dim})")
+        #: Optional jax device this engine is bound to. Committing the
+        #: params pins every jitted apply to that device (staging buffers
+        #: are uncommitted numpy and follow the params), which is how a
+        #: serving :class:`~repro.serve.fleet.ReplicaPool` runs N
+        #: replicas side by side on a multi-device host mesh.
+        self.device = device
+        if device is not None:
+            import jax
+            params = jax.device_put(params, device)
         self.params = params
         self.cfg = cfg
         self.engine_cfg = engine_cfg
@@ -195,9 +209,10 @@ class PredictionEngine:
         self._infer = make_infer_fn(cfg)
         self._staged: dict = {}
         self._compiled_shapes: set = set()
-        #: Serializes run_bin (staging buffers, stats counters, compiled-
-        #: shape bookkeeping) so concurrent submitters — the serving
-        #: micro-batcher, parallel sweeps — can share one engine.
+        #: Guards stats counters + compiled-shape bookkeeping ONLY (not
+        #: the jitted call): concurrent submitters — the serving
+        #: micro-batcher, replica-pool workers, parallel sweeps — share
+        #: one engine and still execute on the device concurrently.
         self._lock = threading.RLock()
 
     # -- compiled-fn cache ---------------------------------------------------
@@ -212,16 +227,18 @@ class PredictionEngine:
 
     def _infer_fn(self, node_bucket: int, batch_bucket: int,
                   edge_bucket: Optional[int] = None):
-        self._track_shape((node_bucket, edge_bucket, batch_bucket))
-        return self._infer
+        with self._lock:
+            self._track_shape((node_bucket, edge_bucket, batch_bucket))
+            return self._infer
 
     def _packed_fn(self, p: int, q: int, g: int):
-        self._track_shape(("packed", p, q, g))
-        key = (p, q, g)
-        if key not in self._staged:
-            self._staged[key] = make_staged_packed_infer_fn(
-                self.cfg, p, q, g)
-        return self._staged[key]
+        with self._lock:
+            self._track_shape(("packed", p, q, g))
+            key = (p, q, g)
+            if key not in self._staged:
+                self._staged[key] = make_staged_packed_infer_fn(
+                    self.cfg, p, q, g)
+            return self._staged[key]
 
     def warmup(self, node_buckets: Optional[Sequence[int]] = None,
                batch_buckets: Optional[Sequence[int]] = None,
@@ -388,9 +405,10 @@ class PredictionEngine:
             batch["adj"] = jnp.asarray(adj)
             fn = self._infer_fn(node_bucket, bb)
         out = np.asarray(fn(self.params, batch))
-        self.stats.batches_run += 1
-        self.stats.node_slots_total += bb * node_bucket
-        self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
+        with self._lock:
+            self.stats.batches_run += 1
+            self.stats.node_slots_total += bb * node_bucket
+            self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
         return out[:b]
 
     def _stage_packed(self, chunk: Sequence[GraphSample], p: int, q: int,
@@ -433,9 +451,10 @@ class PredictionEngine:
         fbuf, ibuf = self._stage_packed(chunk, p, q, g)
         fn = self._packed_fn(p, q, g)
         out = np.asarray(fn(self.params, fbuf, ibuf))
-        self.stats.batches_run += 1
-        self.stats.node_slots_total += p
-        self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
+        with self._lock:
+            self.stats.batches_run += 1
+            self.stats.node_slots_total += p
+            self.stats.node_slots_real += sum(s.n_nodes for s in chunk)
         return out[:len(chunk)]
 
     def plan_bins(self, samples: Sequence[GraphSample]) -> List[List[int]]:
@@ -465,27 +484,32 @@ class PredictionEngine:
         The single dispatch point both prediction paths share:
         :meth:`predict_samples` (bulk sweeps) and the serving
         micro-batcher feed their :meth:`plan_bins` bins here. The
-        engine lock serializes staging, the jitted call, and stats, so
-        concurrent callers interleave at bin granularity. Non-packed
-        bins must be same-bucket (``plan_bins`` guarantees it). Returns
+        engine lock covers only the compiled-fn bookkeeping and stats
+        counters — staging builds thread-local buffers and the jitted
+        call itself is thread-safe in jax — so concurrent callers (a
+        serving batcher fanning bins across a
+        :class:`~repro.serve.fleet.ReplicaPool`, parallel sweeps)
+        genuinely overlap on the device instead of serializing at bin
+        granularity. Non-packed bins must be same-bucket
+        (``plan_bins`` guarantees it). Returns
         ``[len(chunk), n_targets]`` physical-unit predictions in chunk
         order.
         """
         chunk = list(chunk)
         if not chunk:
             return np.zeros((0, self.cfg.n_targets), dtype=np.float32)
+        if self.packed:
+            out = self._run_packed(chunk)
+        else:
+            sizes = {s.x.shape[0] for s in chunk}
+            if len(sizes) != 1:
+                raise ValueError(
+                    f"run_bin needs a single-bucket chunk, got padded "
+                    f"sizes {sorted(sizes)} — plan with plan_bins()")
+            out = self._run_chunk(sizes.pop(), chunk)
         with self._lock:
-            if self.packed:
-                out = self._run_packed(chunk)
-            else:
-                sizes = {s.x.shape[0] for s in chunk}
-                if len(sizes) != 1:
-                    raise ValueError(
-                        f"run_bin needs a single-bucket chunk, got padded "
-                        f"sizes {sorted(sizes)} — plan with plan_bins()")
-                out = self._run_chunk(sizes.pop(), chunk)
             self.stats.graphs_predicted += len(chunk)
-            return out
+        return out
 
     def predict_samples(self, samples: Sequence[GraphSample]) -> np.ndarray:
         """Predict targets for padded samples, in input order.

@@ -75,6 +75,13 @@ def dtype_bytes(dtype: str) -> int:
     return _DTYPE_BYTES.get(str(dtype), 4)
 
 
+#: Weisfeiler–Lehman refinement rounds behind :meth:`OpGraph.fingerprint`.
+#: Each round folds one more hop of wiring into every node label; 4 rounds
+#: separate any two operator DAGs whose 4-hop neighborhoods differ, at
+#: O(rounds · (n + e)) hashing cost.
+_WL_ROUNDS = 4
+
+
 # ---------------------------------------------------------------------------
 # Node / Graph dataclasses
 # ---------------------------------------------------------------------------
@@ -201,14 +208,73 @@ class OpGraph:
         return sum(1 for nd in self.nodes if nd.op == op)
 
     def fingerprint(self) -> str:
-        """Deterministic content hash — used for measurement-noise seeding."""
+        """Canonical content hash — invariant under node reordering.
+
+        Two :class:`OpGraph`\\ s describing the same model must hash
+        equal even when their node lists are permuted or their (dense)
+        ids relabeled — frontends that re-parse a serialized graph can
+        emit nodes in a different order, and the serving layer's
+        content-addressed prediction cache (``repro.serve.cache``) keys
+        on this hash, so an order-sensitive fingerprint would silently
+        miss on every re-parsed duplicate.
+
+        The hash is built from permutation-invariant views only:
+
+        1. a per-node content label ``(op, out_shape, dtype)``, refined
+           for a few Weisfeiler–Lehman rounds over the sorted multisets
+           of predecessor/successor labels (so a node's label encodes
+           its local wiring, not its position);
+        2. the sorted multiset of final node labels;
+        3. the sorted multiset of edge ``(src_label, dst_label)`` pairs;
+        4. node/edge counts and the JSON-canonicalized ``meta``.
+
+        WL-indistinguishable non-isomorphic graphs could in principle
+        collide, but operator DAGs with shaped, typed nodes don't hit
+        those pathologies in practice; for cache keys the failure mode
+        is astronomically unlikely (and bounded by sha256 anyway).
+
+        The hash is memoized on the instance: graphs are treated as
+        immutable once built (every transform in this repo constructs a
+        new ``OpGraph``), and both the serving cache and the cost
+        model's noise seeding hit this per request — recomputing the WL
+        refinement each time would cost more than a cache hit saves.
+        """
+        memo = self.__dict__.get("_fingerprint")
+        if memo is not None:
+            return memo
+        n = len(self.nodes)
+        pos = {nd.node_id: i for i, nd in enumerate(self.nodes)}
+
+        def _h(data: bytes) -> bytes:
+            return hashlib.blake2b(data, digest_size=16).digest()
+
+        labels = [_h(f"{nd.op}|{tuple(nd.out_shape)}|{nd.dtype}".encode())
+                  for nd in self.nodes]
+        preds: List[List[int]] = [[] for _ in range(n)]
+        succs: List[List[int]] = [[] for _ in range(n)]
+        edge_pos = []
+        for s, d in self.edges:
+            si, di = pos[s], pos[d]
+            preds[di].append(si)
+            succs[si].append(di)
+            edge_pos.append((si, di))
+        for _ in range(_WL_ROUNDS):
+            labels = [
+                _h(labels[i]
+                   + b"<" + b"".join(sorted(labels[p] for p in preds[i]))
+                   + b">" + b"".join(sorted(labels[q] for q in succs[i])))
+                for i in range(n)
+            ]
         h = hashlib.sha256()
-        for nd in self.nodes:
-            h.update(f"{nd.op}|{nd.out_shape}|{nd.dtype}".encode())
-        for e in self.edges:
-            h.update(f"{e}".encode())
+        h.update(f"{n}|{len(self.edges)}".encode())
+        for lab in sorted(labels):
+            h.update(lab)
+        for pair in sorted(labels[si] + labels[di] for si, di in edge_pos):
+            h.update(pair)
         h.update(json.dumps(self.meta, sort_keys=True, default=str).encode())
-        return h.hexdigest()
+        fp = h.hexdigest()
+        self.__dict__["_fingerprint"] = fp
+        return fp
 
     # -- serialization (the portable multi-frontend schema) -----------------
     def to_json(self) -> Dict[str, Any]:

@@ -26,6 +26,41 @@ class ElasticPlan:
     note: str
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaPlacement:
+    """Device binding for a serving fleet — the inference-side analogue
+    of :class:`ElasticPlan`. ``device_ids[r]`` is the local-device index
+    replica ``r`` is bound to."""
+
+    n_replicas: int
+    device_ids: Tuple[int, ...]
+    note: str
+
+
+def replica_placement(n_replicas: Optional[int],
+                      n_devices: int) -> ReplicaPlacement:
+    """Round-robin replica→device binding for a serving fleet.
+
+    ``n_replicas=None`` defaults to one replica per local device (the
+    forced-host-mesh case: ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` makes N CPU devices, one replica each). More
+    replicas than devices is allowed — extras share devices round-robin,
+    which still buys dispatch/staging overlap — and after a replica
+    failure the surviving placement is simply the healthy subset (the
+    fleet requeues in-flight bins; no re-binding is needed because
+    every replica holds its own committed copy of the params).
+    """
+    if n_devices < 1:
+        raise ValueError("need at least one device")
+    n = int(n_replicas) if n_replicas else n_devices
+    if n < 1:
+        raise ValueError(f"need at least one replica, got {n}")
+    ids = tuple(i % n_devices for i in range(n))
+    return ReplicaPlacement(
+        n_replicas=n, device_ids=ids,
+        note=f"{n} replicas over {n_devices} devices (round-robin)")
+
+
 def elastic_restart_plan(n_healthy_devices: int, *,
                          model_parallel: int = 16,
                          global_batch: int = 256,

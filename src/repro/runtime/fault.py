@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -69,16 +70,36 @@ class HeartbeatMonitor:
 
 
 class FailureInjector:
-    """Deterministic chaos for tests: fail at chosen steps."""
+    """Deterministic chaos for tests: fail at chosen steps.
+
+    Thread-safe — serving replica workers
+    (:class:`repro.serve.fleet.ReplicaPool`) call :meth:`maybe_fail`
+    from concurrent dispatch threads, where ``step`` is the replica's
+    per-dispatch counter. :meth:`fail_next` arms N one-shot failures
+    for the very next dispatches regardless of step number (the
+    "kill this replica now, mid-stream" drill).
+    """
 
     def __init__(self, fail_at_steps: List[int] = ()):  # noqa: B006
         self.fail_at = set(fail_at_steps)
         self.failures = 0
+        self._armed = 0
+        self._lock = threading.Lock()
+
+    def fail_next(self, n: int = 1) -> None:
+        """Arm the next ``n`` :meth:`maybe_fail` calls to fail."""
+        with self._lock:
+            self._armed += n
 
     def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at:
-            self.fail_at.discard(step)
-            self.failures += 1
+        with self._lock:
+            fire = step in self.fail_at or self._armed > 0
+            if fire:
+                self.fail_at.discard(step)
+                if self._armed:
+                    self._armed -= 1
+                self.failures += 1
+        if fire:
             raise RuntimeError(f"injected failure at step {step}")
 
 

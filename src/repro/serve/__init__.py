@@ -2,22 +2,31 @@
 
 * :class:`PredictionService` / :class:`ServeConfig` / :class:`ServeStats`
   — the micro-batching request/response service (``service.py``).
+* :class:`PredictionCache` — content-addressed fingerprint→prediction
+  LRU with single-flight dedup (``cache.py``).
+* :class:`ReplicaPool` — N device-bound engine replicas behind a
+  least-loaded dispatcher with requeue-on-failure (``fleet.py``).
 * :class:`PredictionFuture` / :class:`QueueFullError` — request
   plumbing (``queue.py``).
 * :func:`save_artifact` / :func:`load_artifact` — versioned, pickle-free
   model artifacts (``artifact.py``).
 
-Entry points: ``DIPPM.serve(**overrides)`` for a dedicated service, or
-construct :class:`PredictionService` directly around trained params (or
-an existing engine). See ``docs/serving.md``.
+Entry points: ``DIPPM.serve(**overrides)`` for a dedicated service
+(``replicas=4, cache_size=8192, max_queue=1024, shed_policy="oldest"``
+are all ServeConfig fields), or construct :class:`PredictionService`
+directly around trained params, an engine, or a pool. See
+``docs/serving.md``.
 """
 from .artifact import (ARTIFACT_SCHEMA, ARTIFACT_VERSION, load_artifact,
                        save_artifact)
+from .cache import PredictionCache
+from .fleet import NoHealthyReplicaError, ReplicaPool
 from .queue import PredictionFuture, QueueFullError
 from .service import PredictionService, ServeConfig, ServeStats
 
 __all__ = [
-    "PredictionService", "ServeConfig", "ServeStats", "PredictionFuture",
+    "PredictionService", "ServeConfig", "ServeStats", "PredictionCache",
+    "ReplicaPool", "NoHealthyReplicaError", "PredictionFuture",
     "QueueFullError", "save_artifact", "load_artifact", "ARTIFACT_SCHEMA",
     "ARTIFACT_VERSION",
 ]

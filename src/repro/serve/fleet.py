@@ -1,0 +1,268 @@
+"""Multi-replica serving fleet: N device-bound engines, one dispatcher.
+
+One :class:`~repro.core.engine.PredictionEngine` caps serving
+throughput at whatever a single device (and a single dispatch stream)
+sustains. :class:`ReplicaPool` scales the backend horizontally:
+
+* **N device-bound replicas** — each replica is a full
+  ``PredictionEngine`` whose params are committed to one local jax
+  device (:func:`repro.runtime.elastic.replica_placement` assigns
+  devices round-robin, one replica per device on a forced multi-device
+  host mesh). Committed params pin every jitted apply to that device,
+  so replicas execute genuinely side by side; the engine lock is
+  narrow (stats/compile bookkeeping only), so even replicas sharing a
+  device overlap staging with execution.
+* **Least-loaded dispatch over the packed bin axis** — the serving
+  micro-batcher plans a drained batch into bins once
+  (:meth:`plan_bins`, identical to the single-engine plan, which is
+  what keeps fleet results bit-equal to the single-replica path) and
+  each bin is dispatched to the healthy replica with the fewest
+  in-flight bins (ties break to the lowest index, so dispatch order is
+  deterministic under sequential submission).
+* **Fault handling, no lost futures** — a replica whose ``run_bin``
+  raises is marked dead and its bin is *requeued* to the remaining
+  healthy replicas (each at most once, so a poisoned bin terminates);
+  only when every healthy replica has refused the bin does the error
+  propagate to the requests' futures. Chaos drills drive this with
+  :class:`repro.runtime.fault.FailureInjector` (one per replica,
+  ``step`` = that replica's dispatch count); liveness is optionally
+  mirrored to file heartbeats (:class:`repro.runtime.fault.
+  HeartbeatMonitor`, one host file per replica) so an external
+  supervisor can watch a serving fleet exactly like a training job.
+
+The pool duck-types the engine surface the service consumes
+(``engine_cfg`` / ``cfg`` / ``packed`` / ``plan_bins`` / ``run_bin`` /
+``warmup`` / ``stats``), so ``PredictionService(engine=pool)`` — or
+``ServeConfig(replicas=N)`` — is the only wiring needed.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.batching import GraphSample
+from ..core.engine import EngineConfig, EngineStats, PredictionEngine
+from ..core.gnn import PMGNSConfig
+from ..runtime.elastic import replica_placement
+from ..runtime.fault import FailureInjector, HeartbeatMonitor
+
+__all__ = ["NoHealthyReplicaError", "ReplicaPool"]
+
+
+class NoHealthyReplicaError(RuntimeError):
+    """Every replica is dead (or has already refused this bin)."""
+
+
+class ReplicaPool:
+    """N device-bound :class:`PredictionEngine` replicas behind a
+    least-loaded dispatcher with requeue-on-failure.
+
+    ``devices`` defaults to ``jax.local_devices()``; ``n_replicas``
+    defaults to one per device. ``injectors`` maps replica index →
+    :class:`FailureInjector` for chaos drills; ``heartbeat_dir`` turns
+    on per-replica file heartbeats (replica index = host id).
+    """
+
+    def __init__(self, params, cfg: PMGNSConfig,
+                 engine_cfg: Optional[EngineConfig] = None, *,
+                 n_replicas: Optional[int] = None,
+                 devices: Optional[Sequence] = None,
+                 injectors: Optional[Dict[int, FailureInjector]] = None,
+                 heartbeat_dir: Optional[str] = None):
+        import jax
+        devices = list(devices) if devices is not None \
+            else jax.local_devices()
+        self.placement = replica_placement(n_replicas, len(devices))
+        engine_cfg = engine_cfg or EngineConfig()
+        self.replicas: List[PredictionEngine] = [
+            PredictionEngine(params, cfg, engine_cfg,
+                             device=devices[di])
+            for di in self.placement.device_ids
+        ]
+        n = len(self.replicas)
+        self.injectors = dict(injectors or {})
+        self._monitors = (
+            [HeartbeatMonitor(heartbeat_dir, host_id=i) for i in range(n)]
+            if heartbeat_dir else None)
+        self._lock = threading.Lock()
+        self._healthy = [True] * n
+        self._inflight = [0] * n
+        self._dispatched = [0] * n   # attempts — the injector step counter
+        self._bin_counts = [0] * n   # completed bins per replica
+        self._requeues = 0
+        self._peak_inflight = 0      # max concurrent in-flight bins, fleet-wide
+        self._exec = ThreadPoolExecutor(
+            max_workers=n, thread_name_prefix="dippm-replica")
+        self._closed = False
+
+    # -- engine-compatible surface (duck-typed by PredictionService) --------
+    @property
+    def engine_cfg(self) -> EngineConfig:
+        return self.replicas[0].engine_cfg
+
+    @property
+    def cfg(self) -> PMGNSConfig:
+        return self.replicas[0].cfg
+
+    @property
+    def packed(self) -> bool:
+        return self.replicas[0].packed
+
+    def plan_bins(self, samples: Sequence[GraphSample]) -> List[List[int]]:
+        """Same plan as a single engine (pure — no replica state), which
+        is what makes fleet results bit-equal to the one-engine path:
+        identical bins → identical jitted computations, only executed on
+        more devices."""
+        return self.replicas[0].plan_bins(samples)
+
+    def warmup(self, *a, **kw) -> int:
+        """Warm every replica's compiled-fn ladder (same signature as
+        ``PredictionEngine.warmup``; each replica holds its own jit
+        cache, pinned to its device). Replicas warm concurrently;
+        returns the total functions compiled."""
+        futs = [self._exec.submit(r.warmup, *a, **kw)
+                for r in self.replicas]
+        return sum(f.result() for f in futs)
+
+    # -- dispatch ------------------------------------------------------------
+    def submit_bin(self, chunk: Sequence[GraphSample]) -> "Future":
+        """Dispatch one planned bin to the fleet; returns a
+        ``concurrent.futures.Future`` of the ``[len(chunk), n_targets]``
+        result. The micro-batcher fans a whole drain's bins out through
+        here so they run on replicas concurrently."""
+        if self._closed:
+            raise RuntimeError("ReplicaPool is closed")
+        return self._exec.submit(self._run_with_failover, list(chunk))
+
+    def run_bin(self, chunk: Sequence[GraphSample]) -> np.ndarray:
+        """Synchronous single-bin dispatch (engine-compatible)."""
+        return self._run_with_failover(list(chunk))
+
+    def _pick(self, tried) -> Tuple[int, int]:
+        """Least-loaded healthy replica not yet tried for this bin."""
+        with self._lock:
+            cands = [i for i in range(len(self.replicas))
+                     if self._healthy[i] and i not in tried]
+            if not cands:
+                raise NoHealthyReplicaError(
+                    f"no healthy replica left for this bin "
+                    f"(health={tuple(self._healthy)}, tried={sorted(tried)})")
+            i = min(cands, key=lambda j: (self._inflight[j], j))
+            self._inflight[i] += 1
+            self._dispatched[i] += 1
+            step = self._dispatched[i]
+            live = sum(self._inflight)
+            self._peak_inflight = max(self._peak_inflight, live)
+            return i, step
+
+    def _run_with_failover(self, chunk: List[GraphSample]) -> np.ndarray:
+        tried: set = set()
+        last: Optional[BaseException] = None
+        while True:
+            try:
+                i, step = self._pick(tried)
+            except NoHealthyReplicaError:
+                raise last if last is not None else NoHealthyReplicaError(
+                    "no healthy replicas in the pool")
+            try:
+                inj = self.injectors.get(i)
+                if inj is not None:
+                    inj.maybe_fail(step)
+                out = self.replicas[i].run_bin(chunk)
+                with self._lock:
+                    self._bin_counts[i] += 1
+                if self._monitors is not None:
+                    self._monitors[i].beat(
+                        self._bin_counts[i], extra={"replica": i})
+                return out
+            except Exception as e:
+                # fault contract: ANY dispatch failure is treated as a
+                # replica crash — mark it dead and requeue the bin on
+                # the survivors (each at most once, so a genuinely
+                # poisoned bin still terminates and surfaces its error)
+                last = e
+                tried.add(i)
+                with self._lock:
+                    self._healthy[i] = False
+                    self._requeues += 1
+            finally:
+                with self._lock:
+                    self._inflight[i] -= 1
+
+    # -- health / stats ------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def health(self) -> Tuple[bool, ...]:
+        with self._lock:
+            return tuple(self._healthy)
+
+    @property
+    def n_healthy(self) -> int:
+        with self._lock:
+            return sum(self._healthy)
+
+    @property
+    def replica_bins(self) -> Tuple[int, ...]:
+        """Completed bins per replica — the dispatch-balance signal
+        surfaced through ``ServeStats.replica_bins``."""
+        with self._lock:
+            return tuple(self._bin_counts)
+
+    @property
+    def requeues(self) -> int:
+        with self._lock:
+            return self._requeues
+
+    @property
+    def peak_inflight(self) -> int:
+        """Max bins in flight across the fleet at once — >1 proves the
+        replicas genuinely overlapped (the scaling benchmark's
+        concurrency gate on hosts too small for wall-clock scaling)."""
+        with self._lock:
+            return self._peak_inflight
+
+    def revive(self, replica: int) -> None:
+        """Mark a dead replica healthy again (tests / manual ops)."""
+        with self._lock:
+            self._healthy[replica] = True
+
+    @property
+    def stats(self) -> EngineStats:
+        """Aggregated :class:`EngineStats` across replicas (counters
+        summed; padding waste derives from the summed slot counters;
+        precision policy is fleet-uniform so replica 0 speaks for it)."""
+        agg = EngineStats()
+        deltas = []
+        for r in self.replicas:
+            s = r.stats
+            agg.graphs_predicted += s.graphs_predicted
+            agg.batches_run += s.batches_run
+            agg.cache_hits += s.cache_hits
+            agg.cache_misses += s.cache_misses
+            agg.cache_entries += s.cache_entries
+            agg.recompiles += s.recompiles
+            agg.node_slots_total += s.node_slots_total
+            agg.node_slots_real += s.node_slots_real
+            if s.bf16_max_abs_delta is not None:
+                deltas.append(s.bf16_max_abs_delta)
+        agg.precision = self.replicas[0].stats.precision
+        agg.bf16_max_abs_delta = max(deltas) if deltas else None
+        return agg
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Stop accepting bins and shut the worker pool down."""
+        self._closed = True
+        self._exec.shutdown(wait=True)
+
+    def __enter__(self) -> "ReplicaPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -120,20 +120,33 @@ class PredictionFuture:
 
 @dataclasses.dataclass
 class Request:
-    """One queued prediction request (already featurized to a sample)."""
+    """One queued prediction request (already featurized to a sample).
+
+    ``fp`` is the graph's canonical fingerprint when the service's
+    prediction cache is on (this request is then a single-flight
+    *leader* — the batcher completes/aborts the cache flight when it
+    resolves the future) and ``None`` when caching is off.
+    """
 
     sample: GraphSample
     meta: Dict[str, Any]
     future: PredictionFuture
     seq: int
     t_submit: float
+    fp: Optional[str] = None
 
 
 class RequestQueue:
     """Bounded FIFO with coalescing-aware waits.
 
-    ``put`` raises :class:`QueueFullError` at capacity (``max_size``
-    None = unbounded). The consumer side is built for a micro-batcher:
+    At capacity (``max_size`` None = unbounded) ``put`` either raises
+    :class:`QueueFullError` (``shed_policy="reject"`` — the *newest*
+    request is turned away at the door) or evicts the *oldest* waiting
+    requests to make room (``shed_policy="oldest"`` — fresh work
+    preempts stale work whose deadline is already blown). Shed requests
+    are handed to the ``on_shed`` callback AFTER the queue lock is
+    released, so the owner can reject their futures without lock-order
+    constraints. The consumer side is built for a micro-batcher:
     :meth:`wait_batch` blocks until a flush condition holds — batch-size
     trigger, the oldest request aging past ``max_wait``, an explicit
     :meth:`flush`, or :meth:`close` — then drains up to ``max_batch``
@@ -141,8 +154,17 @@ class RequestQueue:
     """
 
     def __init__(self, max_size: Optional[int] = None,
-                 batch_hint: Optional[int] = None):
+                 batch_hint: Optional[int] = None,
+                 shed_policy: str = "reject"):
+        if shed_policy not in ("reject", "oldest"):
+            raise ValueError(
+                f"shed_policy must be 'reject' or 'oldest', "
+                f"got {shed_policy!r}")
         self.max_size = max_size
+        self.shed_policy = shed_policy
+        #: Owner hook invoked (outside the lock) with the list of
+        #: requests evicted by shed_policy="oldest".
+        self.on_shed: Optional[Callable[[List[Request]], None]] = None
         #: The consumer's batch size: ``put`` wakes the batcher only on
         #: the empty→non-empty transition and when the backlog reaches
         #: this hint — mid-window arrivals don't need a wakeup (the
@@ -169,67 +191,95 @@ class RequestQueue:
     def closed(self) -> bool:
         return self._closed
 
-    def _append_locked(self, sample: GraphSample,
-                       meta: Dict[str, Any]) -> Request:
+    def _append_locked(self, sample: GraphSample, meta: Dict[str, Any],
+                       fp: Optional[str] = None) -> Request:
         """Build + enqueue one request (caller holds the lock and has
         already checked closed/capacity) — the single construction path
         shared by :meth:`put` and :meth:`put_many`."""
         req = Request(sample=sample, meta=meta,
                       future=PredictionFuture(), seq=self._seq,
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(), fp=fp)
         self._seq += 1
         self._items.append(req)
         self.peak_depth = max(self.peak_depth, len(self._items))
         return req
 
-    def put(self, sample: GraphSample, meta: Dict[str, Any]) -> Request:
+    def _shed_locked(self, need: int) -> List[Request]:
+        """Evict the ``need`` oldest waiting requests (caller holds the
+        lock and has verified the queue holds at least that many)."""
+        return [self._items.popleft() for _ in range(need)]
+
+    def put(self, sample: GraphSample, meta: Dict[str, Any],
+            fp: Optional[str] = None) -> Request:
         """Enqueue; returns the :class:`Request` carrying a fresh future.
 
-        Raises :class:`QueueFullError` when bounded and full, and
-        ``RuntimeError`` after :meth:`close`.
+        When bounded and full: ``shed_policy="reject"`` raises
+        :class:`QueueFullError`; ``shed_policy="oldest"`` evicts the
+        oldest waiting request instead (handed to ``on_shed`` after the
+        lock drops) and admits this one. Raises ``RuntimeError`` after
+        :meth:`close`.
         """
+        shed: List[Request] = []
         with self._cond:
             if self._closed:
                 raise RuntimeError("PredictionService is closed")
             if self.max_size is not None and len(self._items) >= self.max_size:
-                raise QueueFullError(
-                    f"serving queue full ({self.max_size} waiting requests) "
-                    f"— admission control rejected the request; retry with "
-                    f"backoff or raise ServeConfig.max_queue")
-            req = self._append_locked(sample, meta)
+                if self.shed_policy == "oldest" and self._items:
+                    shed = self._shed_locked(1)
+                else:
+                    raise QueueFullError(
+                        f"serving queue full ({self.max_size} waiting "
+                        f"requests) — admission control rejected the "
+                        f"request; retry with backoff or raise "
+                        f"ServeConfig.max_queue")
+            req = self._append_locked(sample, meta, fp)
             depth = len(self._items)
             if depth == 1 or (self.batch_hint is not None
                               and depth >= self.batch_hint):
                 self._cond.notify_all()
-            return req
+        if shed and self.on_shed is not None:
+            self.on_shed(shed)
+        return req
 
     def put_many(self, items) -> List[Request]:
-        """Atomically enqueue a burst of ``(sample, meta)`` pairs.
+        """Atomically enqueue a burst of ``(sample, meta[, fp])`` tuples.
 
         All-or-nothing under admission control: if the burst doesn't fit
         a bounded queue, nothing is enqueued and
-        :class:`QueueFullError` raises. One lock acquisition and one
-        wakeup for the whole burst — and, because the batcher can't
-        interleave a drain mid-burst, a synchronous bulk caller
-        (``predict_many``) gets the same bins a direct engine sweep
-        would plan, instead of fragmenting across drains while later
-        items are still being featurized.
+        :class:`QueueFullError` raises — except under
+        ``shed_policy="oldest"``, where the oldest waiting requests are
+        evicted to make room (a burst larger than ``max_size`` itself is
+        still rejected: shedding cannot make it fit). One lock
+        acquisition and one wakeup for the whole burst — and, because
+        the batcher can't interleave a drain mid-burst, a synchronous
+        bulk caller (``predict_many``) gets the same bins a direct
+        engine sweep would plan, instead of fragmenting across drains
+        while later items are still being featurized.
         """
-        items = list(items)
+        items = [it if len(it) == 3 else (*it, None) for it in items]
+        shed: List[Request] = []
         with self._cond:
             if self._closed:
                 raise RuntimeError("PredictionService is closed")
-            if (self.max_size is not None
-                    and len(self._items) + len(items) > self.max_size):
-                raise QueueFullError(
-                    f"burst of {len(items)} requests does not fit the "
-                    f"serving queue ({len(self._items)} waiting, cap "
-                    f"{self.max_size}) — admission control rejected it")
-            reqs = [self._append_locked(sample, meta)
-                    for sample, meta in items]
+            if self.max_size is not None:
+                need = len(self._items) + len(items) - self.max_size
+                if need > 0:
+                    if (self.shed_policy == "oldest"
+                            and need <= len(self._items)):
+                        shed = self._shed_locked(need)
+                    else:
+                        raise QueueFullError(
+                            f"burst of {len(items)} requests does not fit "
+                            f"the serving queue ({len(self._items)} "
+                            f"waiting, cap {self.max_size}) — admission "
+                            f"control rejected it")
+            reqs = [self._append_locked(sample, meta, fp)
+                    for sample, meta, fp in items]
             if reqs:
                 self._cond.notify_all()
-            return reqs
+        if shed and self.on_shed is not None:
+            self.on_shed(shed)
+        return reqs
 
     def flush(self) -> None:
         """Ask the batcher to drain what's queued now, skipping the

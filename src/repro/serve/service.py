@@ -25,19 +25,42 @@ that gap:
    latency stamped, and :attr:`PredictionService.stats` aggregates
    queue depth, batch occupancy, padding waste, and p50/p99 latency.
 
+Two layers sit between submission and the engine:
+
+* **Content-addressed cache** (``ServeConfig.cache_size``, on by
+  default) — predictions are pure functions of graph content, so a
+  bounded LRU keyed on the canonical
+  :meth:`~repro.core.ir.OpGraph.fingerprint` serves duplicate
+  architectures without any engine work. Hits resolve on the
+  *submitting* thread, immediately and bit-equal to the cold path (the
+  cached value IS the cold path's output vector); concurrent misses for
+  the same graph coalesce single-flight into one engine slot. Note the
+  one FIFO caveat: a cache hit resolves ahead of earlier still-queued
+  misses — arrival-order resolution holds within the engine path, not
+  across the hit/miss boundary.
+* **Replica fleet** (``ServeConfig.replicas``) — with ``replicas>1``
+  the backend is a :class:`~repro.serve.fleet.ReplicaPool` of
+  device-bound engines and each drain's bins fan out to the replicas
+  concurrently (least-loaded dispatch, crash → requeue on survivors:
+  no lost futures).
+
 ``warmup(rungs=...)`` precompiles the budget-rung ladder before traffic;
-``ServeConfig(max_queue=N)`` turns on bounded-queue admission control
-(reject-with-:class:`~repro.serve.queue.QueueFullError` instead of
-buffering unboundedly). The ``DIPPM`` facade's ``predict_graph`` /
-``predict_many`` are thin clients of a shared default service — see
-``DIPPM.serve(**overrides)`` for a dedicated instance.
+``ServeConfig(max_queue=N)`` turns on bounded-queue admission control —
+``shed_policy`` picks who loses at capacity: ``"reject"`` turns the
+newest request away with
+:class:`~repro.serve.queue.QueueFullError`, ``"oldest"`` evicts the
+stalest waiting request (its future rejects) and admits the new one.
+The ``DIPPM`` facade's ``predict_graph`` / ``predict_many`` are thin
+clients of a shared default service — see ``DIPPM.serve(**overrides)``
+for a dedicated instance.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,6 +68,7 @@ from ..core.batching import (packed_rung_ladder, resolve_packed_budgets,
                              sample_from_graph)
 from ..core.engine import EngineConfig, PredictionEngine
 from ..core.ir import OpGraph
+from .cache import CacheWaiter, PredictionCache
 from .queue import PredictionFuture, QueueFullError, Request, RequestQueue
 
 __all__ = ["ServeConfig", "ServeStats", "PredictionService"]
@@ -61,9 +85,17 @@ class ServeConfig:
     ``edge_budget`` / ``graph_budget`` size the engine's packed bins
     when the service builds its own engine (ignored when wrapping an
     existing one). ``max_queue=None`` buffers without bound; an int
-    turns on admission control — ``submit`` raises
-    :class:`~repro.serve.queue.QueueFullError` once that many requests
-    are waiting.
+    turns on admission control — at capacity ``shed_policy="reject"``
+    raises :class:`~repro.serve.queue.QueueFullError` at the door,
+    ``"oldest"`` evicts the stalest waiting request (its future rejects
+    with ``QueueFullError``) and admits the new one.
+
+    ``cache_size`` bounds the content-addressed prediction cache
+    (entries are a few floats each — size it to the distinct-graph
+    working set, not memory); ``None``/``0`` disables caching.
+    ``replicas`` > 1 backs the service with a
+    :class:`~repro.serve.fleet.ReplicaPool` of that many device-bound
+    engines (ignored when wrapping an existing engine).
     """
 
     max_wait_ms: float = 2.0
@@ -74,6 +106,12 @@ class ServeConfig:
     max_queue: Optional[int] = None
     #: Size of the rolling latency window behind the p50/p99 stats.
     latency_window: int = 2048
+    #: LRU capacity of the fingerprint→prediction cache (None/0 = off).
+    cache_size: Optional[int] = 2048
+    #: Engine replicas behind the micro-batcher (1 = single engine).
+    replicas: int = 1
+    #: Who loses when a bounded queue is full: "reject" | "oldest".
+    shed_policy: str = "reject"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,16 +120,28 @@ class ServeStats:
 
     ``batch_occupancy`` is mean graphs per drained batch — how well
     coalescing is working (1.0 ≡ the per-request loop the service
-    exists to beat). ``padding_waste_frac`` comes from the underlying
-    engine (fraction of device node rows that were padding).
+    exists to beat); it counts only engine-path requests, since cache
+    hits never join a batch. ``padding_waste_frac`` comes from the
+    underlying engine (fraction of device node rows that were padding).
     Percentiles are over the last ``ServeConfig.latency_window``
     resolved requests.
+
+    ``cache_*`` / ``hit_rate`` describe the content-addressed
+    *prediction* cache (not the engine's compiled-shape cache):
+    ``cache_hits`` resolved from the store, ``cache_coalesced`` joined
+    an in-flight duplicate, ``cache_misses`` reached the engine.
+    ``shed_count`` is requests evicted by ``shed_policy="oldest"``
+    (``rejected`` counts turn-aways at the door). ``replica_bins`` is
+    completed bins per replica when a fleet backs the service
+    (``replicas`` > 1) and ``requeues`` counts bins re-dispatched after
+    a replica failure.
     """
 
     submitted: int = 0
     completed: int = 0
     rejected: int = 0
     failed: int = 0
+    shed_count: int = 0
     batches: int = 0
     bins: int = 0
     queue_depth: int = 0
@@ -100,6 +150,14 @@ class ServeStats:
     padding_waste_frac: float = 0.0
     latency_ms_p50: float = 0.0
     latency_ms_p99: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_coalesced: int = 0
+    cache_entries: int = 0
+    hit_rate: float = 0.0
+    replicas: int = 1
+    replica_bins: Tuple[int, ...] = ()
+    requeues: int = 0
     #: Engine inference precision policy (``f32`` | ``bf16`` |
     #: ``int8-weights``) and the bf16-vs-f32 max-abs prediction delta
     #: measured at warmup (``None`` unless the engine warmed up in bf16).
@@ -124,11 +182,12 @@ class PredictionService:
                  engine: Optional[PredictionEngine] = None,
                  engine_cfg: Optional[EngineConfig] = None):
         self.serve_cfg = serve_cfg or ServeConfig()
+        sc = self.serve_cfg
+        self._owns_engine = engine is None
         if engine is None:
             if params is None or cfg is None:
                 raise ValueError(
                     "PredictionService needs (params, cfg) or engine=")
-            sc = self.serve_cfg
             if engine_cfg is None and (sc.node_budget or sc.edge_budget
                                        or sc.graph_budget):
                 engine_cfg = EngineConfig(
@@ -136,16 +195,28 @@ class PredictionService:
                     or EngineConfig.node_budget,
                     edge_budget=sc.edge_budget,
                     graph_budget=sc.graph_budget)
-            engine = PredictionEngine(params, cfg,
-                                      engine_cfg or EngineConfig())
+            if sc.replicas > 1:
+                from .fleet import ReplicaPool
+                engine = ReplicaPool(params, cfg,
+                                     engine_cfg or EngineConfig(),
+                                     n_replicas=sc.replicas)
+            else:
+                engine = PredictionEngine(params, cfg,
+                                          engine_cfg or EngineConfig())
         self.engine = engine
-        self._queue = RequestQueue(max_size=self.serve_cfg.max_queue,
-                                   batch_hint=self.serve_cfg.max_batch_graphs)
+        self._cache = (PredictionCache(sc.cache_size)
+                       if sc.cache_size else None)
+        self._queue = RequestQueue(max_size=sc.max_queue,
+                                   batch_hint=sc.max_batch_graphs,
+                                   shed_policy=sc.shed_policy)
+        self._queue.on_shed = self._on_shed
         self._state = threading.Lock()          # guards the counters below
         self._submitted = 0
         self._completed = 0
+        self._engine_done = 0                   # completed via the engine path
         self._rejected = 0
         self._failed = 0
+        self._shed = 0
         self._batches = 0
         self._bins = 0
         self._latencies: deque = deque(maxlen=self.serve_cfg.latency_window)
@@ -157,14 +228,33 @@ class PredictionService:
     def submit(self, g: OpGraph) -> PredictionFuture:
         """Enqueue one graph; returns immediately with a future.
 
-        Featurization runs here, on the caller's thread. Raises
+        With caching on, the canonical fingerprint is checked first:
+        a hit resolves the future right here on the caller's thread
+        (bit-equal to the cold path — the cached vector is the cold
+        path's output); an in-flight duplicate attaches to its leader
+        and never occupies a queue slot. Only genuine misses are
+        featurized and enqueued. Raises
         :class:`~repro.serve.queue.QueueFullError` under admission
         control and ``RuntimeError`` after :meth:`close`.
         """
+        meta = dict(g.meta)
+        if self._cache is not None:
+            fp = g.fingerprint()
+            fut = PredictionFuture()
+            waiter = CacheWaiter(fut, meta, time.perf_counter())
+            status, y = self._cache.claim(fp, waiter)
+            if status != "leader":
+                with self._state:
+                    self._submitted += 1
+                if status == "hit":
+                    self._resolve_waiter(waiter, y)
+                return fut
+        else:
+            fp = None
         ecfg = self.engine.engine_cfg
         sample = sample_from_graph(g, buckets=ecfg.buckets,
                                    extended_static=ecfg.extended_static)
-        return self._submit_sample(sample, dict(g.meta))
+        return self._submit_sample(sample, meta, fp)
 
     def submit_json(self, doc: Dict[str, Any]) -> PredictionFuture:
         """Enqueue a portable serialized graph (``repro.opgraph.v1`` or
@@ -185,12 +275,23 @@ class PredictionService:
         return self.submit(from_jax(forward, param_specs, *input_specs,
                                     meta=m))
 
-    def _submit_sample(self, sample, meta) -> PredictionFuture:
+    def _submit_sample(self, sample, meta,
+                       fp: Optional[str] = None) -> PredictionFuture:
         try:
-            req = self._queue.put(sample, meta)
-        except QueueFullError:
-            with self._state:
-                self._rejected += 1
+            req = self._queue.put(sample, meta, fp)
+        except QueueFullError as e:
+            # this request was the single-flight leader — clear the
+            # flight (a leaked one would strand every future duplicate)
+            # and reject any follower that attached in the meantime
+            if self._cache is not None and fp is not None:
+                followers = self._cache.abort(fp)
+                for w in followers:
+                    w.future._reject(e)
+                with self._state:
+                    self._rejected += 1 + len(followers)
+            else:
+                with self._state:
+                    self._rejected += 1
             raise
         with self._state:
             self._submitted += 1
@@ -201,21 +302,117 @@ class PredictionService:
         """Enqueue a burst atomically — one queue transaction, so the
         batcher plans the whole burst into the same bins a direct
         engine sweep would (no fragmentation across drains while late
-        members are still featurizing). All-or-nothing under admission
-        control."""
+        members are still featurizing). With caching on, duplicates
+        inside the burst (and against the store) collapse first — only
+        distinct uncached graphs occupy queue slots. All-or-nothing
+        under admission control: a rejected burst enqueues nothing (its
+        cache claims are rolled back)."""
         ecfg = self.engine.engine_cfg
-        items = [(sample_from_graph(g, buckets=ecfg.buckets,
-                                    extended_static=ecfg.extended_static),
-                  dict(g.meta)) for g in graphs]
+        if self._cache is None:
+            items = [(sample_from_graph(g, buckets=ecfg.buckets,
+                                        extended_static=ecfg.extended_static),
+                      dict(g.meta)) for g in graphs]
+            try:
+                reqs = self._queue.put_many(items)
+            except QueueFullError:
+                with self._state:
+                    self._rejected += len(items)
+                raise
+            with self._state:
+                self._submitted += len(reqs)
+            return [r.future for r in reqs]
+        # claim every graph first: hits/followers resolve without queue
+        # slots, leaders featurize and enqueue in one transaction
+        slots = []          # ("hit", waiter, y) | ("follower", fut, None)
+        items = []          # leaders: (sample, meta, fp)
+        for g in graphs:
+            fp = g.fingerprint()
+            meta = dict(g.meta)
+            fut = PredictionFuture()
+            waiter = CacheWaiter(fut, meta, time.perf_counter())
+            status, y = self._cache.claim(fp, waiter)
+            if status == "leader":
+                sample = sample_from_graph(
+                    g, buckets=ecfg.buckets,
+                    extended_static=ecfg.extended_static)
+                slots.append(("leader", len(items), None))
+                items.append((sample, meta, fp))
+            else:
+                slots.append((status, waiter, y))
         try:
             reqs = self._queue.put_many(items)
-        except QueueFullError:
+        except QueueFullError as e:
+            n_rej = len(graphs)
+            for _, _, fp in items:
+                for w in self._cache.abort(fp):
+                    w.future._reject(e)
+                    n_rej += 1
             with self._state:
-                self._rejected += len(items)
+                self._rejected += n_rej
             raise
         with self._state:
-            self._submitted += len(reqs)
-        return [r.future for r in reqs]
+            self._submitted += len(graphs)
+        futs: List[PredictionFuture] = []
+        for kind, ref, y in slots:
+            if kind == "leader":
+                futs.append(reqs[ref].future)
+            else:
+                if kind == "hit":
+                    self._resolve_waiter(ref, y)
+                futs.append(ref.future)
+        return futs
+
+    # -- cache / shed plumbing -----------------------------------------------
+    def _resolve_waiter(self, w: CacheWaiter, y,
+                        t_done: Optional[float] = None) -> None:
+        """Resolve one cache hit / coalesced follower from a raw target
+        vector (per-request meta, per-request latency)."""
+        from ..core.predictor import make_prediction
+        t_done = time.perf_counter() if t_done is None else t_done
+        lat_ms = (t_done - w.t_submit) * 1e3
+        try:
+            pred = make_prediction(np.asarray(y), meta=w.meta)
+        except Exception as e:
+            w.future._reject(e)
+            with self._state:
+                self._failed += 1
+            return
+        w.future._resolve(pred, lat_ms)
+        with self._state:
+            self._completed += 1
+            self._latencies.append(lat_ms)
+
+    def _fail_request(self, r: Request, e: BaseException) -> None:
+        """Reject a queued request AND settle its cache flight: abort
+        the fingerprint (next duplicate becomes a fresh leader) and
+        reject any followers riding on it. Idempotent."""
+        if not r.future.done():
+            r.future._reject(e)
+        if self._cache is not None and r.fp is not None:
+            for w in self._cache.abort(r.fp):
+                if not w.future.done():
+                    w.future._reject(e)
+                    with self._state:
+                        self._failed += 1
+
+    def _on_shed(self, shed: List[Request]) -> None:
+        """Queue hook (runs on the *admitting* caller's thread, after
+        the queue lock drops): reject evicted requests' futures."""
+        n = 0
+        for r in shed:
+            e = QueueFullError(
+                "request shed under load (ServeConfig.shed_policy="
+                "'oldest'): a newer request took its queue slot")
+            if not r.future.done():
+                r.future._reject(e)
+                n += 1
+            if self._cache is not None and r.fp is not None:
+                for w in self._cache.abort(r.fp):
+                    if not w.future.done():
+                        w.future._reject(e)
+                        n += 1
+        with self._state:
+            self._shed += n
 
     # -- synchronous conveniences (the facade's delegation path) -------------
     def flush(self) -> None:
@@ -271,9 +468,12 @@ class PredictionService:
         return len(self.engine.engine_cfg.buckets)
 
     def close(self, timeout: Optional[float] = 10.0) -> None:
-        """Refuse new requests, drain the queue, stop the batcher."""
+        """Refuse new requests, drain the queue, stop the batcher (and
+        the replica pool, when the service built it)."""
         self._queue.close()
         self._worker.join(timeout)
+        if self._owns_engine and hasattr(self.engine, "close"):
+            self.engine.close()
 
     def __enter__(self) -> "PredictionService":
         return self
@@ -285,15 +485,18 @@ class PredictionService:
     @property
     def stats(self) -> ServeStats:
         """A detached :class:`ServeStats` snapshot."""
+        cache = self._cache
+        pool_bins = getattr(self.engine, "replica_bins", None)
         with self._state:
             lat = np.asarray(self._latencies, dtype=np.float64)
             batches = self._batches
-            occupancy = (self._completed / batches) if batches else 0.0
+            occupancy = (self._engine_done / batches) if batches else 0.0
             return ServeStats(
                 submitted=self._submitted,
                 completed=self._completed,
                 rejected=self._rejected,
                 failed=self._failed,
+                shed_count=self._shed,
                 batches=batches,
                 bins=self._bins,
                 queue_depth=len(self._queue),
@@ -306,6 +509,17 @@ class PredictionService:
                 if lat.size else 0.0,
                 latency_ms_p99=float(np.percentile(lat, 99))
                 if lat.size else 0.0,
+                cache_hits=cache.hits if cache is not None else 0,
+                cache_misses=cache.misses if cache is not None else 0,
+                cache_coalesced=(cache.coalesced
+                                 if cache is not None else 0),
+                cache_entries=len(cache) if cache is not None else 0,
+                hit_rate=(round(cache.hit_rate, 4)
+                          if cache is not None else 0.0),
+                replicas=getattr(self.engine, "n_replicas", 1),
+                replica_bins=(tuple(pool_bins)
+                              if pool_bins is not None else ()),
+                requeues=getattr(self.engine, "requeues", 0),
             )
 
     # -- batcher thread ------------------------------------------------------
@@ -323,12 +537,9 @@ class PredictionService:
                 # killing the batcher (a dead batcher hangs every
                 # pending and future request forever)
                 for r in batch:
-                    if not r.future.done():
-                        r.future._reject(e)
+                    self._fail_request(r, e)
 
     def _process(self, batch: List[Request]) -> None:
-        import time
-
         from ..core.predictor import make_prediction
         lats: List[float] = []
         done = failed = n_bins = 0
@@ -342,30 +553,62 @@ class PredictionService:
             n_bins = len(bins)
             ys = np.zeros((len(samples), self.engine.cfg.n_targets),
                           dtype=np.float32)
-            for idx in bins:
-                ys[idx] = self.engine.run_bin([samples[j] for j in idx])
+            # a failed bin fails only its own requests (the fleet has
+            # already exhausted requeue-on-healthy-replicas by the time
+            # an error surfaces here)
+            bin_err: List[Optional[BaseException]] = [None] * len(samples)
+            submit_bin = getattr(self.engine, "submit_bin", None)
+            if submit_bin is not None and n_bins > 1:
+                # fleet backend: fan this drain's bins out so they run
+                # on the replicas concurrently
+                futs = [(idx, submit_bin([samples[j] for j in idx]))
+                        for idx in bins]
+                for idx, f in futs:
+                    try:
+                        ys[idx] = f.result()
+                    except Exception as e:
+                        for j in idx:
+                            bin_err[j] = e
+            else:
+                for idx in bins:
+                    try:
+                        ys[idx] = self.engine.run_bin(
+                            [samples[j] for j in idx])
+                    except Exception as e:
+                        for j in idx:
+                            bin_err[j] = e
             t_done = time.perf_counter()
             # batch is FIFO-drained, so walking it resolves futures in
             # submission order; ys is already scattered to batch order
-            for r, y in zip(batch, ys):
+            for j, (r, y) in enumerate(zip(batch, ys)):
+                if bin_err[j] is not None:
+                    self._fail_request(r, bin_err[j])
+                    failed += 1
+                    continue
                 lat_ms = (t_done - r.t_submit) * 1e3
                 try:
                     pred = make_prediction(y, meta=r.meta)
                 except Exception as e:          # a bad row fails one future
-                    r.future._reject(e)
+                    self._fail_request(r, e)
                     failed += 1
                     continue
                 lats.append(lat_ms)
                 done += 1
                 r.future._resolve(pred, lat_ms)
+                if self._cache is not None and r.fp is not None:
+                    # populate the cache and release this fingerprint's
+                    # coalesced followers with the same vector
+                    for w in self._cache.complete(r.fp, y):
+                        self._resolve_waiter(w, y, t_done)
         except Exception as e:                  # resolve, never hang callers
             for r in batch:
                 if not r.future.done():
-                    r.future._reject(e)
+                    self._fail_request(r, e)
                     failed += 1
         finally:
             with self._state:
                 self._completed += done
+                self._engine_done += done
                 self._failed += failed
                 self._batches += 1
                 self._bins += n_bins

@@ -123,6 +123,50 @@ def test_fingerprint_depends_on_structure(depth, scale):
     assert g1.fingerprint() == g2.fingerprint()
 
 
+def _permuted(g, perm):
+    """Relabel node ids by ``perm`` and shuffle the node list — the same
+    graph as a re-parsing frontend might emit it."""
+    nodes = [OpNode(perm[nd.node_id], nd.op, nd.out_shape, dtype=nd.dtype,
+                    attrs=dict(nd.attrs), flops=nd.flops, macs=nd.macs)
+             for nd in g.nodes]
+    nodes.sort(key=lambda nd: nd.node_id)
+    edges = [(perm[s], perm[d]) for s, d in g.edges]
+    edges.reverse()
+    return OpGraph(nodes=nodes, edges=edges, meta=dict(g.meta))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_fingerprint_canonical_under_node_reordering(seed):
+    """The cache contract: equal graphs hash equal regardless of node
+    order / id labeling (frontends' re-parse can permute both)."""
+    import random
+    g = _mlp_graph(depth=3, width=16)
+    perm = list(range(g.num_nodes))
+    random.Random(seed).shuffle(perm)
+    gp = _permuted(g, {i: p for i, p in enumerate(perm)})
+    assert gp.fingerprint() == g.fingerprint()
+    # list-order-only permutation (ids kept) must also be invariant
+    g_shuf = OpGraph(nodes=list(reversed(g.nodes)), edges=list(g.edges),
+                     meta=dict(g.meta))
+    assert g_shuf.fingerprint() == g.fingerprint()
+
+
+def test_fingerprint_sensitive_to_rewiring_shape_and_meta():
+    base = OpGraph(
+        nodes=[OpNode(0, "dense", (4, 8)), OpNode(1, "relu", (4, 8)),
+               OpNode(2, "add", (4, 8)), OpNode(3, "tanh", (4, 8))],
+        edges=[(0, 1), (1, 2), (2, 3)], meta={"batch": 4})
+    rewired = OpGraph(nodes=base.nodes,
+                      edges=[(0, 1), (0, 2), (2, 3)], meta={"batch": 4})
+    assert rewired.fingerprint() != base.fingerprint()
+    reshaped = OpGraph(
+        nodes=[OpNode(0, "dense", (4, 16))] + base.nodes[1:],
+        edges=base.edges, meta={"batch": 4})
+    assert reshaped.fingerprint() != base.fingerprint()
+    remeta = OpGraph(nodes=base.nodes, edges=base.edges, meta={"batch": 8})
+    assert remeta.fingerprint() != base.fingerprint()
+
+
 def test_filter_contracts_connectivity():
     nodes = [
         OpNode(0, "dense", (4, 4)),

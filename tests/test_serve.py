@@ -377,3 +377,292 @@ def test_artifact_roundtrip_property(dims, variant, seed):
                 np.testing.assert_array_equal(a[k], b[k])
 
     assert_equal(params, back)
+
+
+# ---- content-addressed prediction cache ------------------------------------
+
+def _pred_vec(p):
+    return np.array([p.latency_ms, p.energy_j, p.memory_mb])
+
+
+def test_cache_hit_is_bit_equal_and_skips_engine(packed_dippm):
+    """A duplicate graph (same canonical fingerprint) resolves from the
+    cache — EXACTLY equal to the cold-path prediction, and without the
+    batcher running another batch."""
+    svc = packed_dippm.serve(max_wait_ms=2.0)
+    try:
+        cold = svc.predict_one(_graph(20, seed=7))
+        before = svc.stats
+        warm = svc.predict_one(_graph(20, seed=7))
+        after = svc.stats
+        assert after.cache_hits == before.cache_hits + 1
+        assert after.cache_misses == before.cache_misses
+        assert after.batches == before.batches   # no engine work at all
+        np.testing.assert_array_equal(_pred_vec(warm), _pred_vec(cold))
+        assert warm.meta == cold.meta
+        assert after.hit_rate == pytest.approx(0.5)
+    finally:
+        svc.close()
+
+
+def test_cache_single_flight_coalesces_duplicates_to_one_slot(packed_dippm):
+    """N pending requests for the same uncached graph cost ONE engine
+    slot: first is the leader, the rest coalesce and resolve from the
+    leader's result, all identical."""
+    svc = packed_dippm.serve(max_wait_ms=30_000.0, max_batch_graphs=1024)
+    try:
+        futs = [svc.submit(_graph(30, seed=3)) for _ in range(8)]
+        st = svc.stats
+        assert st.cache_misses == 1 and st.cache_coalesced == 7
+        svc.flush()
+        preds = [f.result(timeout=60) for f in futs]
+        assert len({tuple(_pred_vec(p)) for p in preds}) == 1
+        st = svc.stats
+        assert st.completed == 8
+        assert st.batches == 1 and st.batch_occupancy == 1.0
+        for p in preds:                       # per-request latency stamped
+            assert p.meta == {"seed": 3, "n": 30}
+    finally:
+        svc.close()
+
+
+def test_cache_lru_bound_evicts_oldest(packed_dippm):
+    """The cache never exceeds capacity; the least-recently-used entry
+    is evicted first and re-misses on its next lookup."""
+    svc = packed_dippm.serve(cache_size=4, max_wait_ms=2.0)
+    try:
+        svc.predict_many([_graph(6, seed=s) for s in range(6)])
+        assert svc.stats.cache_entries == 4
+        assert svc.stats.cache_misses == 6
+        svc.predict_one(_graph(6, seed=5))    # newest: still cached
+        assert svc.stats.cache_hits == 1
+        svc.predict_one(_graph(6, seed=0))    # oldest: evicted, re-miss
+        assert svc.stats.cache_misses == 7
+    finally:
+        svc.close()
+
+
+def test_cache_meta_participates_in_key(packed_dippm):
+    """Same topology but different graph meta must NOT collide (meta
+    feeds the cost model's noise seeding downstream)."""
+    g1 = _graph(8, seed=0)
+    g2 = OpGraph(nodes=g1.nodes, edges=g1.edges, meta={"other": True})
+    svc = packed_dippm.serve(max_wait_ms=2.0)
+    try:
+        svc.predict_one(g1)
+        svc.predict_one(g2)
+        assert svc.stats.cache_misses == 2 and svc.stats.cache_hits == 0
+    finally:
+        svc.close()
+
+
+def test_cache_failed_leader_aborts_flight_and_next_retry_succeeds(
+        packed_dippm, monkeypatch):
+    """A leader whose bin fails must clear the in-flight slot: its
+    followers reject with the same error, and the NEXT duplicate becomes
+    a fresh leader that can succeed once the engine recovers."""
+    svc = packed_dippm.serve(max_wait_ms=30_000.0, max_batch_graphs=1024)
+    try:
+        orig = svc.engine.run_bin
+        state = {"fail": True}
+
+        def flaky(chunk):
+            if state["fail"]:
+                raise RuntimeError("boom")
+            return orig(chunk)
+
+        monkeypatch.setattr(svc.engine, "run_bin", flaky)
+        leader = svc.submit(_graph(9, seed=11))
+        follower = svc.submit(_graph(9, seed=11))
+        svc.flush()
+        assert isinstance(leader.exception(timeout=30), RuntimeError)
+        assert isinstance(follower.exception(timeout=30), RuntimeError)
+        assert svc.stats.failed == 2
+        state["fail"] = False
+        retry = svc.submit(_graph(9, seed=11))  # fresh leader, not follower
+        svc.flush()
+        assert retry.result(timeout=30) is not None
+        assert svc.stats.cache_misses == 2
+    finally:
+        svc.close()
+
+
+def test_cache_disabled_with_none(packed_dippm):
+    svc = packed_dippm.serve(cache_size=None, max_wait_ms=2.0)
+    try:
+        svc.predict_one(_graph(5, seed=0))
+        svc.predict_one(_graph(5, seed=0))    # duplicate runs twice
+        st = svc.stats
+        assert st.cache_hits == 0 and st.cache_misses == 0
+        assert st.batches == 2
+    finally:
+        svc.close()
+
+
+# ---- load shedding ----------------------------------------------------------
+
+def test_shed_oldest_evicts_stalest_request(packed_dippm):
+    """shed_policy='oldest': at capacity the stalest waiting request is
+    evicted (its future rejects with QueueFullError) and the newcomer is
+    admitted — the opposite of the 'reject' door policy."""
+    svc = packed_dippm.serve(max_wait_ms=30_000.0, max_batch_graphs=1024,
+                             max_queue=2, shed_policy="oldest")
+    try:
+        f1 = svc.submit(_graph(5, seed=0))
+        f2 = svc.submit(_graph(6, seed=1))
+        f3 = svc.submit(_graph(7, seed=2))    # sheds f1, admits f3
+        assert isinstance(f1.exception(timeout=5), QueueFullError)
+        st = svc.stats
+        assert st.shed_count == 1 and st.rejected == 0
+        svc.flush()
+        assert f2.result(timeout=30) and f3.result(timeout=30)
+        # the shed request's cache flight was aborted: a duplicate of f1
+        # becomes a fresh leader and succeeds
+        retry = svc.submit(_graph(5, seed=0))
+        svc.flush()
+        assert retry.result(timeout=30) is not None
+    finally:
+        svc.close()
+
+
+def test_shed_policy_validated(packed_dippm):
+    with pytest.raises(ValueError, match="shed_policy"):
+        packed_dippm.serve(shed_policy="drop-new")
+
+
+# ---- replica fleet ----------------------------------------------------------
+
+def _fleet_service(dippm, n_replicas=2, injectors=None, node_budget=256,
+                   **serve_kw):
+    from repro.core.engine import EngineConfig
+    from repro.serve import ReplicaPool
+    pool = ReplicaPool(dippm.params, dippm.cfg,
+                       EngineConfig(node_budget=node_budget),
+                       n_replicas=n_replicas, injectors=injectors)
+    svc = PredictionService(engine=pool, serve_cfg=ServeConfig(
+        node_budget=node_budget, **serve_kw))
+    return pool, svc
+
+
+def test_fleet_dispatches_bins_across_replicas(packed_dippm):
+    """An atomic burst that plans into multiple bins spreads them over
+    the replicas (least-loaded dispatch), and results are EXACTLY equal
+    to the single-engine path — same plan, same jitted computations."""
+    from repro.core.engine import EngineConfig
+    graphs = [_graph(10 + (s % 13), seed=s) for s in range(30)]
+    pool, svc = _fleet_service(packed_dippm, n_replicas=2)
+    try:
+        preds = svc.predict_many(graphs, timeout=120)
+        st = svc.stats
+        assert st.replicas == 2
+        assert sum(st.replica_bins) == st.bins >= 2
+        assert all(b > 0 for b in st.replica_bins)  # both participated
+        eng = PredictionEngine(packed_dippm.params, packed_dippm.cfg,
+                               EngineConfig(node_budget=256))
+        ref_svc = PredictionService(engine=eng, serve_cfg=ServeConfig(
+            node_budget=256))
+        try:
+            ref = ref_svc.predict_many(graphs, timeout=120)
+        finally:
+            ref_svc.close()
+        for a, b in zip(preds, ref):
+            np.testing.assert_array_equal(_pred_vec(a), _pred_vec(b))
+    finally:
+        svc.close()
+        pool.close()
+
+
+def test_fleet_replica_kill_mid_stream_no_lost_futures(packed_dippm):
+    """Chaos drill: a FailureInjector kills replica 0 on its second bin
+    dispatch while a Poisson stream is in flight. Every future must
+    still resolve (requeued onto the survivor) and the numbers must
+    match the single-engine reference."""
+    from repro.runtime.fault import FailureInjector
+    inj = {0: FailureInjector(fail_at_steps=[2])}
+    pool, svc = _fleet_service(packed_dippm, n_replicas=2, injectors=inj,
+                               max_wait_ms=2.0)
+    graphs = [_graph(10 + (s % 13), seed=s) for s in range(40)]
+    try:
+        rng = np.random.default_rng(0)
+        futs = []
+        for g in graphs:                      # open-loop Poisson arrivals
+            futs.append(svc.submit(g))
+            time.sleep(float(rng.exponential(0.002)))
+        svc.flush()
+        preds = [f.result(timeout=120) for f in futs]
+        assert all(p is not None for p in preds)
+        assert inj[0].failures == 1
+        assert pool.health == (False, True)
+        st = svc.stats
+        assert st.completed == len(graphs) and st.failed == 0
+        assert st.requeues >= 1
+        ref = [packed_dippm.predict_graph(g) for g in graphs]
+        for a, b in zip(preds, ref):
+            np.testing.assert_allclose(_pred_vec(a), _pred_vec(b),
+                                       atol=1e-5, rtol=1e-5)
+    finally:
+        svc.close()
+        pool.close()
+
+
+def test_fleet_all_replicas_dead_rejects_not_hangs(packed_dippm):
+    """When every replica has failed, pending futures reject with the
+    underlying error — nothing blocks forever."""
+    from repro.runtime.fault import FailureInjector
+    inj = {0: FailureInjector(), 1: FailureInjector()}
+    inj[0].fail_next(10)
+    inj[1].fail_next(10)
+    pool, svc = _fleet_service(packed_dippm, n_replicas=2, injectors=inj,
+                               cache_size=None, max_wait_ms=30_000.0,
+                               max_batch_graphs=1024)
+    try:
+        futs = svc.submit_many([_graph(8, seed=s) for s in range(5)])
+        svc.flush()
+        errs = [f.exception(timeout=60) for f in futs]
+        assert all(isinstance(e, RuntimeError) for e in errs)
+        assert svc.stats.failed == 5
+        assert pool.n_healthy == 0
+    finally:
+        svc.close()
+        pool.close()
+
+
+def test_fleet_warmup_and_heartbeats(packed_dippm, tmp_path):
+    """warmup() compiles every replica's ladder; completed bins beat
+    per-replica heartbeat files an external supervisor can read."""
+    from repro.core.engine import EngineConfig
+    from repro.serve import ReplicaPool
+    pool = ReplicaPool(packed_dippm.params, packed_dippm.cfg,
+                       EngineConfig(node_budget=256), n_replicas=2,
+                       heartbeat_dir=str(tmp_path))
+    try:
+        single = PredictionEngine(packed_dippm.params, packed_dippm.cfg,
+                                  EngineConfig(node_budget=256))
+        n_single = single.warmup()
+        assert pool.warmup() == 2 * n_single
+        svc = PredictionService(engine=pool, serve_cfg=ServeConfig(
+            node_budget=256))
+        try:
+            svc.predict_many([_graph(10 + (s % 13), seed=s)
+                              for s in range(30)], timeout=120)
+        finally:
+            svc.close()
+        beats = pool._monitors[0].read_all()
+        assert {b["replica"] for b in beats} == {0, 1}
+        assert all(b["step"] >= 1 for b in beats)
+    finally:
+        pool.close()
+
+
+def test_serve_config_replicas_builds_pool(packed_dippm):
+    """ServeConfig(replicas=N) is the one-knob fleet entry point — the
+    facade's serve() passes it straight through."""
+    svc = packed_dippm.serve(replicas=2, node_budget=256)
+    try:
+        svc.predict_many([_graph(8, seed=s) for s in range(20)],
+                         timeout=120)
+        st = svc.stats
+        assert st.replicas == 2 and sum(st.replica_bins) == st.bins
+    finally:
+        svc.close()             # service owns the pool: close() shuts it
+        assert svc.engine._closed
