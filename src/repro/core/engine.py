@@ -65,6 +65,24 @@ INFERENCE_BUCKETS: Tuple[int, ...] = (
     896, 1024)
 
 
+class PredictionInvalidError(RuntimeError):
+    """The engine produced non-finite (NaN/Inf) outputs for a bin.
+
+    Degenerate inputs (NaN node statistics, overflowing feature
+    magnitudes) silently corrupt every downstream consumer if the raw
+    vector is returned — or worse, cached. :meth:`PredictionEngine.run_bin`
+    validates outputs and raises this instead; ``bad_rows`` lists the
+    in-chunk indices whose output rows were non-finite (advisory: with
+    gather/scatter kernels a NaN can bleed across rows of a packed bin,
+    so the serving layer isolates the true poison request by split-retry
+    bisection rather than trusting the row list).
+    """
+
+    def __init__(self, message: str, bad_rows: Tuple[int, ...] = ()):
+        super().__init__(message)
+        self.bad_rows = tuple(bad_rows)
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Knobs for the batched prediction engine.
@@ -89,6 +107,12 @@ class EngineConfig:
     node_budget: int = DEFAULT_NODE_BUDGET
     edge_budget: Optional[int] = None
     graph_budget: Optional[int] = None
+    #: Validate bin outputs for NaN/Inf and raise
+    #: :class:`PredictionInvalidError` instead of returning (or letting
+    #: serving cache) silently corrupt numbers. The check is a
+    #: ``np.isfinite`` pass over the tiny ``[G, n_targets]`` output —
+    #: negligible next to the apply itself.
+    validate_outputs: bool = True
 
 
 @dataclasses.dataclass
@@ -507,6 +531,15 @@ class PredictionEngine:
                     f"run_bin needs a single-bucket chunk, got padded "
                     f"sizes {sorted(sizes)} — plan with plan_bins()")
             out = self._run_chunk(sizes.pop(), chunk)
+        if self.engine_cfg.validate_outputs:
+            finite = np.isfinite(out).all(axis=-1)
+            if not finite.all():
+                bad = tuple(int(i) for i in np.flatnonzero(~finite))
+                raise PredictionInvalidError(
+                    f"non-finite predictions for {len(bad)}/{len(chunk)} "
+                    f"graphs in bin (rows {bad[:8]}"
+                    f"{'...' if len(bad) > 8 else ''}) — degenerate "
+                    f"input features or numeric overflow", bad_rows=bad)
         with self._lock:
             self.stats.graphs_predicted += len(chunk)
         return out

@@ -22,7 +22,8 @@ import dataclasses
 import json
 from typing import Any, Dict, Optional
 
-from .ir import OP_INDEX, OpGraph, OpNode, filter_and_preprocess
+from .ir import (OP_INDEX, GraphValidationError, OpGraph, OpNode,
+                 filter_and_preprocess)
 from .tracer import trace_graph
 
 #: aliases accepted from external exporters → canonical OP_VOCAB names
@@ -57,10 +58,68 @@ def from_jax(fn, params_spec, *data_specs, meta=None,
                        max_scan_iters=max_scan_iters)
 
 
+def _validated_edges(doc: Dict[str, Any], node_ids: set) -> list:
+    """Edge list as int pairs; typed errors for malformed/dangling refs."""
+    edges = []
+    for k, e in enumerate(doc.get("edges", []) or []):
+        try:
+            a, b = int(e[0]), int(e[1])
+        except (TypeError, ValueError, IndexError, KeyError):
+            raise GraphValidationError(
+                f"edge {k} is not an (src, dst) integer pair: {e!r}")
+        for nid in (a, b):
+            if nid not in node_ids:
+                raise GraphValidationError(
+                    f"edge {k} ({a} -> {b}) references node {nid}, "
+                    f"which is not in the node list", node_id=nid)
+        edges.append((a, b))
+    return edges
+
+
+def _check_acyclic(g: OpGraph) -> OpGraph:
+    try:
+        g.topo_order()
+    except ValueError:
+        raise GraphValidationError(
+            "graph contains a cycle — operator graphs must be DAGs")
+    return g
+
+
 def from_json(doc: Dict[str, Any]) -> OpGraph:
-    """Parse the portable schema (or a raw exporter node list) to OpGraph."""
+    """Parse the portable schema (or a raw exporter node list) to OpGraph.
+
+    Structurally invalid documents raise
+    :class:`~repro.core.ir.GraphValidationError` with node-level context
+    (missing fields, dangling edge references, negative shape dims,
+    duplicate ids, cycles) instead of leaking raw ``KeyError`` /
+    ``IndexError`` from arbitrary user payloads — serving maps this to
+    an immediate request rejection before any queue slot is taken.
+    """
+    if not isinstance(doc, dict):
+        raise GraphValidationError(
+            f"graph document must be a mapping, got {type(doc).__name__}")
+    if "nodes" not in doc:
+        raise GraphValidationError("graph document has no 'nodes' list")
     if doc.get("schema") == "repro.opgraph.v1":
-        g = OpGraph.from_json(doc)
+        try:
+            g = OpGraph.from_json(doc)
+        except GraphValidationError:
+            raise
+        except (KeyError, TypeError, ValueError, IndexError) as e:
+            raise GraphValidationError(
+                f"malformed repro.opgraph.v1 document: "
+                f"{type(e).__name__}: {e}")
+        for nd in g.nodes:
+            if any(d < 0 for d in nd.out_shape):
+                raise GraphValidationError(
+                    f"node {nd.node_id} has a negative out_shape dim: "
+                    f"{nd.out_shape}", node_id=nd.node_id)
+        ids = [nd.node_id for nd in g.nodes]
+        if len(set(ids)) != len(ids):
+            dup = next(i for i in ids if ids.count(i) > 1)
+            raise GraphValidationError(
+                f"duplicate node id {dup}", node_id=dup)
+        _validated_edges({"edges": [list(e) for e in g.edges]}, set(ids))
         # re-canonicalize op names from foreign exporters; replace nodes
         # instead of assigning nd.op in place — parsing must never
         # mutate OpNodes it shares with the caller's graph objects
@@ -71,25 +130,58 @@ def from_json(doc: Dict[str, Any]) -> OpGraph:
                 op = "elementwise"
             raw.append(nd if op == nd.op
                        else dataclasses.replace(nd, op=op))
-        return filter_and_preprocess(raw, g.edges, meta=g.meta)
+        return _check_acyclic(
+            filter_and_preprocess(raw, g.edges, meta=g.meta))
     # raw exporter format: {"nodes": [{"id", "op", "out_shape", ...}],
     #                       "edges": [[s,d],...], "meta": {...}}
     nodes = []
-    for d in doc["nodes"]:
+    seen_ids: set = set()
+    for k, d in enumerate(doc["nodes"]):
+        if not isinstance(d, dict):
+            raise GraphValidationError(
+                f"node {k} is not a mapping: {d!r}")
+        for field in ("id", "op"):
+            if field not in d:
+                raise GraphValidationError(
+                    f"node {k} is missing required field {field!r}")
+        try:
+            nid = int(d["id"])
+        except (TypeError, ValueError):
+            raise GraphValidationError(
+                f"node {k} has a non-integer id: {d['id']!r}")
+        if nid in seen_ids:
+            raise GraphValidationError(
+                f"duplicate node id {nid}", node_id=nid)
+        seen_ids.add(nid)
+        try:
+            out_shape = tuple(int(x) for x in d.get("out_shape", ()))
+        except (TypeError, ValueError):
+            raise GraphValidationError(
+                f"node {nid} has a malformed out_shape: "
+                f"{d.get('out_shape')!r}", node_id=nid)
+        if any(x < 0 for x in out_shape):
+            raise GraphValidationError(
+                f"node {nid} has a negative out_shape dim: {out_shape}",
+                node_id=nid)
         op = str(d["op"]).lower()
         op = _OP_ALIASES.get(op, op if op in OP_INDEX else "elementwise")
-        nodes.append(OpNode(
-            node_id=int(d["id"]), op=op,
-            out_shape=tuple(int(x) for x in d.get("out_shape", ())),
-            dtype=str(d.get("dtype", "float32")),
-            attrs=dict(d.get("attrs", {})),
-            flops=float(d.get("flops", 0.0)),
-            macs=float(d.get("macs", 0.0)),
-            bytes_accessed=float(d.get("bytes_accessed", 0.0)),
-            param_bytes=float(d.get("param_bytes", 0.0)),
-        ))
-    edges = [(int(a), int(b)) for a, b in doc.get("edges", [])]
-    return filter_and_preprocess(nodes, edges, meta=doc.get("meta", {}))
+        try:
+            nodes.append(OpNode(
+                node_id=nid, op=op, out_shape=out_shape,
+                dtype=str(d.get("dtype", "float32")),
+                attrs=dict(d.get("attrs", {})),
+                flops=float(d.get("flops", 0.0)),
+                macs=float(d.get("macs", 0.0)),
+                bytes_accessed=float(d.get("bytes_accessed", 0.0)),
+                param_bytes=float(d.get("param_bytes", 0.0)),
+            ))
+        except (TypeError, ValueError) as e:
+            raise GraphValidationError(
+                f"node {nid} has malformed numeric fields: {e}",
+                node_id=nid)
+    edges = _validated_edges(doc, seen_ids)
+    return _check_acyclic(
+        filter_and_preprocess(nodes, edges, meta=doc.get("meta", {})))
 
 
 def from_json_file(path: str) -> OpGraph:

@@ -75,6 +75,22 @@ def dtype_bytes(dtype: str) -> int:
     return _DTYPE_BYTES.get(str(dtype), 4)
 
 
+class GraphValidationError(ValueError):
+    """A submitted graph document is structurally invalid.
+
+    Raised by the frontends (``repro.core.frontends.from_json``) with
+    node-level context — missing fields, dangling edge references,
+    negative shape dims, cycles — instead of leaking raw ``KeyError``
+    / ``IndexError`` from arbitrary user payloads. ``node_id`` carries
+    the offending node when one is identifiable. The serving layer
+    maps this to an immediate future rejection (the request never
+    touches the queue)."""
+
+    def __init__(self, message: str, node_id: Optional[int] = None):
+        super().__init__(message)
+        self.node_id = node_id
+
+
 #: Weisfeiler–Lehman refinement rounds behind :meth:`OpGraph.fingerprint`.
 #: Each round folds one more hop of wiring into every node label; 4 rounds
 #: separate any two operator DAGs whose 4-hop neighborhoods differ, at

@@ -84,6 +84,7 @@ class FailureInjector:
         self.fail_at = set(fail_at_steps)
         self.failures = 0
         self._armed = 0
+        self._windows: List[tuple] = []
         self._lock = threading.Lock()
 
     def fail_next(self, n: int = 1) -> None:
@@ -91,9 +92,21 @@ class FailureInjector:
         with self._lock:
             self._armed += n
 
+    def fail_window(self, start: int, end: int) -> None:
+        """Fail every dispatch with ``start <= step < end`` — an outage
+        *interval* rather than a point failure. Chaos drills use this to
+        model a replica that is down for a stretch and then recovers,
+        which is exactly the shape a circuit breaker (open → cooldown →
+        half-open probe) is built for."""
+        if end <= start:
+            raise ValueError(f"empty failure window [{start}, {end})")
+        with self._lock:
+            self._windows.append((start, end))
+
     def maybe_fail(self, step: int) -> None:
         with self._lock:
-            fire = step in self.fail_at or self._armed > 0
+            fire = (step in self.fail_at or self._armed > 0
+                    or any(s <= step < e for s, e in self._windows))
             if fire:
                 self.fail_at.discard(step)
                 if self._armed:

@@ -8,6 +8,12 @@
   least-loaded dispatcher with requeue-on-failure (``fleet.py``).
 * :class:`PredictionFuture` / :class:`QueueFullError` — request
   plumbing (``queue.py``).
+* Lifecycle primitives (``lifecycle.py``) — typed terminal errors
+  (:class:`DeadlineExceededError`, :class:`PoisonRequestError`,
+  :class:`ServiceDrainingError`, re-exported
+  :class:`PredictionInvalidError` / :class:`GraphValidationError`),
+  per-replica :class:`CircuitBreaker` policy (:class:`BreakerConfig`)
+  and the poison-fingerprint :class:`QuarantineList`.
 * :func:`save_artifact` / :func:`load_artifact` — versioned, pickle-free
   model artifacts (``artifact.py``).
 
@@ -21,6 +27,10 @@ from .artifact import (ARTIFACT_SCHEMA, ARTIFACT_VERSION, load_artifact,
                        save_artifact)
 from .cache import PredictionCache
 from .fleet import NoHealthyReplicaError, ReplicaPool
+from .lifecycle import (BreakerConfig, CircuitBreaker,
+                        DeadlineExceededError, GraphValidationError,
+                        PoisonRequestError, PredictionInvalidError,
+                        QuarantineList, ServiceDrainingError)
 from .queue import PredictionFuture, QueueFullError
 from .service import PredictionService, ServeConfig, ServeStats
 
@@ -29,4 +39,7 @@ __all__ = [
     "ReplicaPool", "NoHealthyReplicaError", "PredictionFuture",
     "QueueFullError", "save_artifact", "load_artifact", "ARTIFACT_SCHEMA",
     "ARTIFACT_VERSION",
+    "DeadlineExceededError", "PoisonRequestError", "ServiceDrainingError",
+    "PredictionInvalidError", "GraphValidationError",
+    "BreakerConfig", "CircuitBreaker", "QuarantineList",
 ]

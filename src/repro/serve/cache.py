@@ -40,12 +40,16 @@ __all__ = ["CacheWaiter", "PredictionCache"]
 @dataclasses.dataclass
 class CacheWaiter:
     """A follower parked on an in-flight fingerprint: its future, the
-    request's own meta (cached ``y`` is meta-free), and the submit time
-    used to stamp ``latency_ms`` at resolution."""
+    request's own meta (cached ``y`` is meta-free), the submit time
+    used to stamp ``latency_ms`` at resolution, and the absolute
+    deadline (``None`` = none) — a follower whose deadline passes while
+    parked is rejected with ``DeadlineExceededError`` at settlement
+    instead of receiving a result it stopped waiting for."""
 
     future: Any
     meta: Dict[str, Any]
     t_submit: float
+    deadline: Optional[float] = None
 
 
 class PredictionCache:
@@ -82,36 +86,53 @@ class PredictionCache:
         return (self.hits + self.coalesced) / total if total else 0.0
 
     # -- claim / complete / abort -------------------------------------------
-    def claim(self, key: str,
-              waiter: CacheWaiter) -> Tuple[str, Optional[np.ndarray]]:
+    def claim(self, key: str, waiter: CacheWaiter
+              ) -> Tuple[str, Optional[np.ndarray], Optional[object]]:
         """Atomically route one lookup. Returns one of:
 
-        * ``("hit", y)`` — cached; resolve now, ``waiter`` not kept;
-        * ``("follower", None)`` — ``key`` is in flight; ``waiter`` is
-          parked and resolves when the leader completes/aborts;
-        * ``("leader", None)`` — caller owns the flight: it must
-          featurize + enqueue, and later :meth:`complete` or
-          :meth:`abort` the key (also on every enqueue-failure path —
-          a leaked flight would strand future followers forever).
+        * ``("hit", y, None)`` — cached; resolve now, ``waiter`` not
+          kept;
+        * ``("follower", None, None)`` — ``key`` is in flight;
+          ``waiter`` is parked and resolves when the leader
+          completes/aborts;
+        * ``("leader", None, flight)`` — caller owns the flight: it
+          must featurize + enqueue, and later :meth:`complete` or
+          :meth:`abort` the key *with that flight token* (also on every
+          enqueue-failure path — a leaked flight would strand future
+          followers forever). Tokens scope settlement to the claiming
+          flight: after an abort, a stale second abort (a racing
+          failure path) cannot tear down the *successor* flight a
+          retry has since opened for the same fingerprint.
         """
         with self._lock:
             y = self._store.get(key)
             if y is not None:
                 self._store.move_to_end(key)
                 self.hits += 1
-                return "hit", y
+                return "hit", y, None
             if key in self._inflight:
                 self._inflight[key].append(waiter)
                 self.coalesced += 1
-                return "follower", None
-            self._inflight[key] = []
+                return "follower", None, None
+            flight: List[CacheWaiter] = []
+            self._inflight[key] = flight
             self.misses += 1
-            return "leader", None
+            return "leader", None, flight
 
-    def complete(self, key: str, y: np.ndarray) -> List[CacheWaiter]:
+    def _pop_flight(self, key: str, flight) -> List[CacheWaiter]:
+        cur = self._inflight.get(key)
+        if cur is None or (flight is not None and cur is not flight):
+            return []                   # not ours (or already settled)
+        del self._inflight[key]
+        return cur
+
+    def complete(self, key: str, y: np.ndarray,
+                 flight=None) -> List[CacheWaiter]:
         """Leader resolved: store ``y`` (evicting LRU past capacity) and
-        return the followers to resolve with it. Idempotent-safe: a key
-        that is not in flight just updates the store."""
+        return the followers to resolve with it. ``flight`` (when
+        given) must match the claiming token or no followers are
+        returned. Idempotent-safe: a key that is not in flight just
+        updates the store."""
         y = np.asarray(y)
         with self._lock:
             self._store[key] = y
@@ -119,12 +140,14 @@ class PredictionCache:
             while len(self._store) > self.capacity:
                 self._store.popitem(last=False)
                 self.evictions += 1
-            return self._inflight.pop(key, [])
+            return self._pop_flight(key, flight)
 
-    def abort(self, key: str) -> List[CacheWaiter]:
+    def abort(self, key: str, flight=None) -> List[CacheWaiter]:
         """Leader failed (engine error, shed, rejected enqueue): clear
         the flight WITHOUT populating the store and return the
         followers so the caller can reject them. The next request for
-        ``key`` becomes a fresh leader."""
+        ``key`` becomes a fresh leader. With a ``flight`` token the
+        abort is scoped: it never settles a successor flight opened by
+        a retry after this leader already failed."""
         with self._lock:
-            return self._inflight.pop(key, [])
+            return self._pop_flight(key, flight)

@@ -20,15 +20,24 @@ sustains. :class:`ReplicaPool` scales the backend horizontally:
   in-flight bins (ties break to the lowest index, so dispatch order is
   deterministic under sequential submission).
 * **Fault handling, no lost futures** — a replica whose ``run_bin``
-  raises is marked dead and its bin is *requeued* to the remaining
-  healthy replicas (each at most once, so a poisoned bin terminates);
-  only when every healthy replica has refused the bin does the error
-  propagate to the requests' futures. Chaos drills drive this with
+  raises trips its :class:`~repro.serve.lifecycle.CircuitBreaker`
+  (closed → open) and its bin is *requeued* to the remaining healthy
+  replicas (each at most once per bin, so a poisoned bin terminates);
+  only when every dispatchable replica has refused the bin does a
+  :class:`NoHealthyReplicaError` (chaining the last underlying error)
+  propagate to the requests' futures. An open breaker re-admits after
+  ``cooldown_s`` via a single half-open *probe* bin: success re-closes
+  it (the ``revive()`` path — a flapping replica recovers capacity
+  automatically instead of staying dead forever), failure re-opens it
+  for another cooldown. Bins carrying a deadline abort the requeue
+  loop with ``DeadlineExceededError`` once every rider has expired.
+  Chaos drills drive this with
   :class:`repro.runtime.fault.FailureInjector` (one per replica,
-  ``step`` = that replica's dispatch count); liveness is optionally
-  mirrored to file heartbeats (:class:`repro.runtime.fault.
-  HeartbeatMonitor`, one host file per replica) so an external
-  supervisor can watch a serving fleet exactly like a training job.
+  ``step`` = that replica's dispatch count); liveness and breaker
+  state are optionally mirrored to file heartbeats
+  (:class:`repro.runtime.fault.HeartbeatMonitor`, one host file per
+  replica) so an external supervisor can watch a serving fleet exactly
+  like a training job.
 
 The pool duck-types the engine surface the service consumes
 (``engine_cfg`` / ``cfg`` / ``packed`` / ``plan_bins`` / ``run_bin`` /
@@ -38,22 +47,29 @@ The pool duck-types the engine surface the service consumes
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.batching import GraphSample
-from ..core.engine import EngineConfig, EngineStats, PredictionEngine
+from ..core.engine import (EngineConfig, EngineStats, PredictionEngine,
+                           PredictionInvalidError)
 from ..core.gnn import PMGNSConfig
 from ..runtime.elastic import replica_placement
 from ..runtime.fault import FailureInjector, HeartbeatMonitor
+from .lifecycle import BreakerConfig, CircuitBreaker, DeadlineExceededError
 
 __all__ = ["NoHealthyReplicaError", "ReplicaPool"]
 
 
 class NoHealthyReplicaError(RuntimeError):
-    """Every replica is dead (or has already refused this bin)."""
+    """No replica can take this bin: every breaker is open (or has
+    already refused this bin). Chains the last underlying replica
+    error via ``__cause__`` — the serving layer treats this as an
+    *infrastructure* failure (fail the bin, never quarantine its
+    graphs)."""
 
 
 class ReplicaPool:
@@ -64,6 +80,10 @@ class ReplicaPool:
     defaults to one per device. ``injectors`` maps replica index →
     :class:`FailureInjector` for chaos drills; ``heartbeat_dir`` turns
     on per-replica file heartbeats (replica index = host id).
+    ``breaker`` sets the per-replica circuit-breaker policy — the
+    default (``failure_threshold=1, cooldown_s=30``) trips on any
+    failure like the old mark-dead contract, but re-admits after the
+    cooldown via a half-open probe bin instead of staying dead.
     """
 
     def __init__(self, params, cfg: PMGNSConfig,
@@ -71,7 +91,8 @@ class ReplicaPool:
                  n_replicas: Optional[int] = None,
                  devices: Optional[Sequence] = None,
                  injectors: Optional[Dict[int, FailureInjector]] = None,
-                 heartbeat_dir: Optional[str] = None):
+                 heartbeat_dir: Optional[str] = None,
+                 breaker: Optional[BreakerConfig] = None):
         import jax
         devices = list(devices) if devices is not None \
             else jax.local_devices()
@@ -88,11 +109,14 @@ class ReplicaPool:
             [HeartbeatMonitor(heartbeat_dir, host_id=i) for i in range(n)]
             if heartbeat_dir else None)
         self._lock = threading.Lock()
-        self._healthy = [True] * n
+        self.breaker_cfg = breaker or BreakerConfig()
+        self.breakers = [CircuitBreaker(self.breaker_cfg)
+                         for _ in range(n)]
         self._inflight = [0] * n
         self._dispatched = [0] * n   # attempts — the injector step counter
         self._bin_counts = [0] * n   # completed bins per replica
         self._requeues = 0
+        self._revivals = 0           # half-open probes that re-closed
         self._peak_inflight = 0      # max concurrent in-flight bins, fleet-wide
         self._exec = ThreadPoolExecutor(
             max_workers=n, thread_name_prefix="dippm-replica")
@@ -128,29 +152,44 @@ class ReplicaPool:
         return sum(f.result() for f in futs)
 
     # -- dispatch ------------------------------------------------------------
-    def submit_bin(self, chunk: Sequence[GraphSample]) -> "Future":
+    def submit_bin(self, chunk: Sequence[GraphSample],
+                   deadline: Optional[float] = None) -> "Future":
         """Dispatch one planned bin to the fleet; returns a
         ``concurrent.futures.Future`` of the ``[len(chunk), n_targets]``
         result. The micro-batcher fans a whole drain's bins out through
-        here so they run on replicas concurrently."""
+        here so they run on replicas concurrently. ``deadline`` is the
+        bin's *latest* rider deadline (absolute ``perf_counter``):
+        requeue attempts stop once it passes — nobody is waiting."""
         if self._closed:
             raise RuntimeError("ReplicaPool is closed")
-        return self._exec.submit(self._run_with_failover, list(chunk))
+        return self._exec.submit(self._run_with_failover, list(chunk),
+                                 deadline)
 
-    def run_bin(self, chunk: Sequence[GraphSample]) -> np.ndarray:
+    def run_bin(self, chunk: Sequence[GraphSample],
+                deadline: Optional[float] = None) -> np.ndarray:
         """Synchronous single-bin dispatch (engine-compatible)."""
-        return self._run_with_failover(list(chunk))
+        return self._run_with_failover(list(chunk), deadline)
 
     def _pick(self, tried) -> Tuple[int, int]:
-        """Least-loaded healthy replica not yet tried for this bin."""
+        """Least-loaded dispatchable replica not yet tried for this bin.
+
+        Dispatchable = breaker closed, or open past its cooldown (the
+        check transitions it to half-open), or half-open with no probe
+        in flight. Picking a half-open replica consumes its single
+        probe token, so exactly one bin probes a recovering replica.
+        """
         with self._lock:
+            now = time.perf_counter()
             cands = [i for i in range(len(self.replicas))
-                     if self._healthy[i] and i not in tried]
+                     if i not in tried
+                     and self.breakers[i].can_dispatch(now)]
             if not cands:
                 raise NoHealthyReplicaError(
-                    f"no healthy replica left for this bin "
-                    f"(health={tuple(self._healthy)}, tried={sorted(tried)})")
+                    f"no dispatchable replica left for this bin "
+                    f"(breakers={self.breaker_states}, "
+                    f"tried={sorted(tried)})")
             i = min(cands, key=lambda j: (self._inflight[j], j))
+            self.breakers[i].on_dispatch(now)
             self._inflight[i] += 1
             self._dispatched[i] += 1
             step = self._dispatched[i]
@@ -158,39 +197,83 @@ class ReplicaPool:
             self._peak_inflight = max(self._peak_inflight, live)
             return i, step
 
-    def _run_with_failover(self, chunk: List[GraphSample]) -> np.ndarray:
+    def _run_with_failover(self, chunk: List[GraphSample],
+                           deadline: Optional[float] = None) -> np.ndarray:
         tried: set = set()
         last: Optional[BaseException] = None
         while True:
+            if (tried and deadline is not None
+                    and time.perf_counter() >= deadline):
+                # requeue stage deadline: every rider of this bin has
+                # expired — stop burning replica attempts on it
+                raise DeadlineExceededError(
+                    f"bin deadline expired after {len(tried)} failed "
+                    f"dispatch attempt(s); last error: {last}")
             try:
                 i, step = self._pick(tried)
-            except NoHealthyReplicaError:
-                raise last if last is not None else NoHealthyReplicaError(
-                    "no healthy replicas in the pool")
+            except NoHealthyReplicaError as e:
+                if last is not None:
+                    raise NoHealthyReplicaError(
+                        f"{e} — last replica error: "
+                        f"{type(last).__name__}: {last}") from last
+                raise
             try:
                 inj = self.injectors.get(i)
                 if inj is not None:
                     inj.maybe_fail(step)
                 out = self.replicas[i].run_bin(chunk)
+            except PredictionInvalidError:
+                # a verdict about the BIN CONTENT (non-finite outputs),
+                # not the replica — the kernel ran fine. Credit the
+                # breaker as a mechanical success (a half-open probe
+                # must release its token and re-close) and let the
+                # serving layer bisect the poison out; requeueing the
+                # same content on another replica would just fail again
+                # and burn the whole fleet's breakers.
                 with self._lock:
-                    self._bin_counts[i] += 1
-                if self._monitors is not None:
-                    self._monitors[i].beat(
-                        self._bin_counts[i], extra={"replica": i})
-                return out
+                    if self.breakers[i].record_success():
+                        self._revivals += 1
+                    self._inflight[i] -= 1
+                self._beat(i, state=self.breakers[i].state,
+                           error="PredictionInvalidError (bin content)")
+                raise
             except Exception as e:
-                # fault contract: ANY dispatch failure is treated as a
-                # replica crash — mark it dead and requeue the bin on
-                # the survivors (each at most once, so a genuinely
-                # poisoned bin still terminates and surfaces its error)
+                # fault contract: ANY dispatch failure trips the
+                # replica's breaker and requeues the bin on the
+                # survivors (each at most once, so a genuinely poisoned
+                # bin still terminates and surfaces its error). The
+                # breaker re-admits the replica after its cooldown via
+                # a half-open probe — no permanent capacity loss.
                 last = e
                 tried.add(i)
                 with self._lock:
-                    self._healthy[i] = False
+                    self.breakers[i].record_failure()
                     self._requeues += 1
-            finally:
-                with self._lock:
                     self._inflight[i] -= 1
+                self._beat(i, state=self.breakers[i].state,
+                           error=f"{type(e).__name__}: {e}")
+            else:
+                with self._lock:
+                    revived = self.breakers[i].record_success()
+                    if revived:
+                        self._revivals += 1
+                    self._bin_counts[i] += 1
+                    count = self._bin_counts[i]
+                    self._inflight[i] -= 1
+                self._beat(i, step_override=count,
+                           state=self.breakers[i].state)
+                return out
+
+    def _beat(self, i: int, step_override: Optional[int] = None,
+              **extra) -> None:
+        if self._monitors is None:
+            return
+        step = (step_override if step_override is not None
+                else self._bin_counts[i])
+        self._monitors[i].beat(step, extra={"replica": i,
+                                            "breaker": extra.pop(
+                                                "state", "closed"),
+                                            **extra})
 
     # -- health / stats ------------------------------------------------------
     @property
@@ -199,13 +282,27 @@ class ReplicaPool:
 
     @property
     def health(self) -> Tuple[bool, ...]:
+        """Per-replica dispatchability as seen right now: ``True`` only
+        for a *closed* breaker (open and half-open replicas are both
+        degraded — they get at most a probe, not regular traffic)."""
         with self._lock:
-            return tuple(self._healthy)
+            return tuple(b.state == "closed" for b in self.breakers)
 
     @property
     def n_healthy(self) -> int:
         with self._lock:
-            return sum(self._healthy)
+            return sum(b.state == "closed" for b in self.breakers)
+
+    @property
+    def breaker_states(self) -> Tuple[str, ...]:
+        """Per-replica breaker state (``closed``/``open``/``half-open``)."""
+        return tuple(b.state for b in self.breakers)
+
+    @property
+    def revivals(self) -> int:
+        """Half-open probes that succeeded and re-closed a breaker."""
+        with self._lock:
+            return self._revivals
 
     @property
     def replica_bins(self) -> Tuple[int, ...]:
@@ -228,9 +325,10 @@ class ReplicaPool:
             return self._peak_inflight
 
     def revive(self, replica: int) -> None:
-        """Mark a dead replica healthy again (tests / manual ops)."""
+        """Force a replica's breaker closed (tests / manual ops) —
+        equivalent to a successful half-open probe without the wait."""
         with self._lock:
-            self._healthy[replica] = True
+            self.breakers[replica].force_close()
 
     @property
     def stats(self) -> EngineStats:

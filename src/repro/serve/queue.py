@@ -21,6 +21,7 @@ from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
 from ..core.batching import GraphSample
+from .lifecycle import ServiceDrainingError
 
 
 class QueueFullError(RuntimeError):
@@ -97,25 +98,32 @@ class PredictionFuture:
             traceback.print_exc()
 
     # -- service-side resolution (single batcher thread) --------------------
-    def _fire(self) -> None:
-        # set the event under the same lock that guards the callback
-        # list: a register racing with resolution either lands in `cbs`
-        # (fired below) or observes the event set and self-fires — no
-        # window where it is appended to the emptied list and lost
+    def _settle(self, result, exc: Optional[BaseException],
+                latency_ms: Optional[float]) -> None:
+        # outcome write + event set + callback handoff all under ONE
+        # lock acquisition: a register racing with resolution either
+        # lands in `cbs` (fired below) or observes the event set and
+        # self-fires — no window where it is appended to the emptied
+        # list and lost. First settle wins: a second _resolve/_reject
+        # is a no-op, so every future terminates EXACTLY once (the
+        # lifecycle invariant tests and the chaos gate assert) and
+        # racing failure paths can't overwrite a delivered outcome.
         with self._lock:
+            if self._event.is_set():
+                return
+            self._result = result
+            self._exc = exc
+            self.latency_ms = latency_ms
             cbs, self._callbacks = self._callbacks, []
             self._event.set()
         for fn in cbs:
             self._run_callback(fn)
 
     def _resolve(self, result, latency_ms: float) -> None:
-        self._result = result
-        self.latency_ms = latency_ms
-        self._fire()
+        self._settle(result, None, latency_ms)
 
     def _reject(self, exc: BaseException) -> None:
-        self._exc = exc
-        self._fire()
+        self._settle(None, exc, None)
 
 
 @dataclasses.dataclass
@@ -123,9 +131,15 @@ class Request:
     """One queued prediction request (already featurized to a sample).
 
     ``fp`` is the graph's canonical fingerprint when the service's
-    prediction cache is on (this request is then a single-flight
-    *leader* — the batcher completes/aborts the cache flight when it
-    resolves the future) and ``None`` when caching is off.
+    prediction cache or quarantine is on (this request is then a
+    single-flight *leader* — the batcher completes/aborts the cache
+    flight when it resolves the future) and ``None`` otherwise.
+    ``flight`` is the cache-flight token returned by
+    ``PredictionCache.claim`` — complete/abort are scoped to it, so a
+    stale failure path can never settle a *successor* flight for the
+    same fingerprint. ``deadline`` is the absolute ``perf_counter``
+    instant after which no stage should spend work on this request
+    (``None`` = wait forever).
     """
 
     sample: GraphSample
@@ -134,6 +148,13 @@ class Request:
     seq: int
     t_submit: float
     fp: Optional[str] = None
+    flight: Optional[object] = None
+    deadline: Optional[float] = None
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline is None:
+            return False
+        return (time.perf_counter() if now is None else now) >= self.deadline
 
 
 class RequestQueue:
@@ -192,13 +213,15 @@ class RequestQueue:
         return self._closed
 
     def _append_locked(self, sample: GraphSample, meta: Dict[str, Any],
-                       fp: Optional[str] = None) -> Request:
+                       fp: Optional[str] = None, flight=None,
+                       deadline: Optional[float] = None) -> Request:
         """Build + enqueue one request (caller holds the lock and has
         already checked closed/capacity) — the single construction path
         shared by :meth:`put` and :meth:`put_many`."""
         req = Request(sample=sample, meta=meta,
                       future=PredictionFuture(), seq=self._seq,
-                      t_submit=time.perf_counter(), fp=fp)
+                      t_submit=time.perf_counter(), fp=fp, flight=flight,
+                      deadline=deadline)
         self._seq += 1
         self._items.append(req)
         self.peak_depth = max(self.peak_depth, len(self._items))
@@ -210,19 +233,23 @@ class RequestQueue:
         return [self._items.popleft() for _ in range(need)]
 
     def put(self, sample: GraphSample, meta: Dict[str, Any],
-            fp: Optional[str] = None) -> Request:
+            fp: Optional[str] = None, flight=None,
+            deadline: Optional[float] = None) -> Request:
         """Enqueue; returns the :class:`Request` carrying a fresh future.
 
         When bounded and full: ``shed_policy="reject"`` raises
         :class:`QueueFullError`; ``shed_policy="oldest"`` evicts the
         oldest waiting request instead (handed to ``on_shed`` after the
-        lock drops) and admits this one. Raises ``RuntimeError`` after
-        :meth:`close`.
+        lock drops) and admits this one. Raises
+        :class:`~repro.serve.lifecycle.ServiceDrainingError` (a
+        ``RuntimeError``) after :meth:`close`.
         """
         shed: List[Request] = []
         with self._cond:
             if self._closed:
-                raise RuntimeError("PredictionService is closed")
+                raise ServiceDrainingError(
+                    "PredictionService is closed (draining) — not "
+                    "accepting new requests")
             if self.max_size is not None and len(self._items) >= self.max_size:
                 if self.shed_policy == "oldest" and self._items:
                     shed = self._shed_locked(1)
@@ -232,7 +259,7 @@ class RequestQueue:
                         f"requests) — admission control rejected the "
                         f"request; retry with backoff or raise "
                         f"ServeConfig.max_queue")
-            req = self._append_locked(sample, meta, fp)
+            req = self._append_locked(sample, meta, fp, flight, deadline)
             depth = len(self._items)
             if depth == 1 or (self.batch_hint is not None
                               and depth >= self.batch_hint):
@@ -242,7 +269,8 @@ class RequestQueue:
         return req
 
     def put_many(self, items) -> List[Request]:
-        """Atomically enqueue a burst of ``(sample, meta[, fp])`` tuples.
+        """Atomically enqueue a burst of
+        ``(sample, meta[, fp[, flight[, deadline]]])`` tuples.
 
         All-or-nothing under admission control: if the burst doesn't fit
         a bounded queue, nothing is enqueued and
@@ -256,11 +284,13 @@ class RequestQueue:
         engine sweep would plan, instead of fragmenting across drains
         while later items are still being featurized.
         """
-        items = [it if len(it) == 3 else (*it, None) for it in items]
+        items = [(*it, *((None,) * (5 - len(it)))) for it in items]
         shed: List[Request] = []
         with self._cond:
             if self._closed:
-                raise RuntimeError("PredictionService is closed")
+                raise ServiceDrainingError(
+                    "PredictionService is closed (draining) — not "
+                    "accepting new requests")
             if self.max_size is not None:
                 need = len(self._items) + len(items) - self.max_size
                 if need > 0:
@@ -273,8 +303,8 @@ class RequestQueue:
                             f"the serving queue ({len(self._items)} "
                             f"waiting, cap {self.max_size}) — admission "
                             f"control rejected it")
-            reqs = [self._append_locked(sample, meta, fp)
-                    for sample, meta, fp in items]
+            reqs = [self._append_locked(sample, meta, fp, flight, deadline)
+                    for sample, meta, fp, flight, deadline in items]
             if reqs:
                 self._cond.notify_all()
         if shed and self.on_shed is not None:

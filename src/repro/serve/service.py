@@ -53,6 +53,33 @@ stalest waiting request (its future rejects) and admits the new one.
 The ``DIPPM`` facade's ``predict_graph`` / ``predict_many`` are thin
 clients of a shared default service — see ``DIPPM.serve(**overrides)``
 for a dedicated instance.
+
+**Request-lifecycle hardening** (see ``repro.serve.lifecycle``): every
+accepted future terminates exactly once — with a result or a *typed*
+error — no matter what fails underneath:
+
+* **deadlines** — ``submit(..., deadline_ms=...)`` (or
+  ``ServeConfig.default_deadline_ms``) bounds how long a request may
+  *wait*; expired requests are rejected with
+  :class:`~repro.serve.lifecycle.DeadlineExceededError` at every
+  waiting stage (queued at drain time, parked as a cache follower,
+  staged behind earlier bins, stuck in a replica-requeue loop) so the
+  batcher never spends bin slots on abandoned work. Work already
+  dispatched still resolves normally.
+* **poison quarantine** — a bin that fails with a non-infrastructure
+  error is split-retried (O(log n) sub-bins) to isolate the poison
+  request(s): innocents complete, the offender fails with
+  :class:`~repro.serve.lifecycle.PoisonRequestError` and its
+  fingerprint is quarantined (bounded LRU) so resubmits fail fast at
+  the door. ``ServeConfig.poison_policy="fail-bin"`` restores the old
+  whole-bin-fails behavior for comparison.
+* **circuit breakers** — replica failures trip per-replica breakers
+  (closed → open → half-open) instead of permanently marking replicas
+  dead; a cooled-down replica rejoins via a single probe bin.
+* **graceful drain** — :meth:`PredictionService.drain` stops admission
+  (:class:`~repro.serve.lifecycle.ServiceDrainingError` at the door)
+  and resolves everything in flight before :meth:`close` releases the
+  engine.
 """
 from __future__ import annotations
 
@@ -67,8 +94,12 @@ import numpy as np
 from ..core.batching import (packed_rung_ladder, resolve_packed_budgets,
                              sample_from_graph)
 from ..core.engine import EngineConfig, PredictionEngine
-from ..core.ir import OpGraph
+from ..core.ir import GraphValidationError, OpGraph
 from .cache import CacheWaiter, PredictionCache
+from .fleet import NoHealthyReplicaError
+from .lifecycle import (BreakerConfig, DeadlineExceededError,
+                        PoisonRequestError, PredictionInvalidError,
+                        QuarantineList, ServiceDrainingError)
 from .queue import PredictionFuture, QueueFullError, Request, RequestQueue
 
 __all__ = ["ServeConfig", "ServeStats", "PredictionService"]
@@ -96,6 +127,19 @@ class ServeConfig:
     ``replicas`` > 1 backs the service with a
     :class:`~repro.serve.fleet.ReplicaPool` of that many device-bound
     engines (ignored when wrapping an existing engine).
+
+    Lifecycle knobs: ``default_deadline_ms`` applies to every submit
+    that doesn't pass its own ``deadline_ms`` (``None`` = requests wait
+    forever). ``quarantine_size`` bounds the poison-fingerprint LRU
+    (``None``/``0`` disables quarantine — bisection still isolates
+    poison, but resubmits are not fast-failed). ``poison_policy``
+    selects what happens when a dispatched bin fails with a
+    non-infrastructure error: ``"bisect"`` split-retries to isolate the
+    poison request(s) so innocents complete, ``"fail-bin"`` fails every
+    rider (the pre-hardening behavior, kept for comparison).
+    ``breaker`` overrides the replica circuit-breaker policy passed to
+    the pool the service builds (``None`` = ``BreakerConfig()``
+    defaults).
     """
 
     max_wait_ms: float = 2.0
@@ -112,6 +156,14 @@ class ServeConfig:
     replicas: int = 1
     #: Who loses when a bounded queue is full: "reject" | "oldest".
     shed_policy: str = "reject"
+    #: Deadline applied to submits that don't pass one (None = never).
+    default_deadline_ms: Optional[float] = None
+    #: LRU capacity of the poison-fingerprint quarantine (None/0 = off).
+    quarantine_size: Optional[int] = 256
+    #: Failed-bin recovery: "bisect" (isolate poison) | "fail-bin".
+    poison_policy: str = "bisect"
+    #: Replica circuit-breaker policy (None = BreakerConfig defaults).
+    breaker: Optional[BreakerConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +187,18 @@ class ServeStats:
     completed bins per replica when a fleet backs the service
     (``replicas`` > 1) and ``requeues`` counts bins re-dispatched after
     a replica failure.
+
+    Lifecycle counters: ``deadline_expired`` requests rejected with
+    ``DeadlineExceededError`` at a waiting stage; ``poisoned`` requests
+    isolated by split-retry bisection; ``bisect_runs`` sub-bin
+    executions spent on that isolation; ``quarantine_fastfail``
+    resubmits rejected at the door; ``quarantine_entries`` fingerprints
+    currently quarantined; ``invalid`` documents rejected by
+    ``submit_json`` validation; ``breaker_states`` / ``revivals``
+    mirror the fleet's circuit breakers (closed replicas take traffic;
+    a revival is a half-open probe that re-closed one); ``draining`` is
+    True once :meth:`PredictionService.drain` / ``close`` stopped
+    admission.
     """
 
     submitted: int = 0
@@ -142,6 +206,15 @@ class ServeStats:
     rejected: int = 0
     failed: int = 0
     shed_count: int = 0
+    deadline_expired: int = 0
+    poisoned: int = 0
+    bisect_runs: int = 0
+    quarantine_fastfail: int = 0
+    quarantine_entries: int = 0
+    invalid: int = 0
+    draining: bool = False
+    breaker_states: Tuple[str, ...] = ()
+    revivals: int = 0
     batches: int = 0
     bins: int = 0
     queue_depth: int = 0
@@ -199,13 +272,17 @@ class PredictionService:
                 from .fleet import ReplicaPool
                 engine = ReplicaPool(params, cfg,
                                      engine_cfg or EngineConfig(),
-                                     n_replicas=sc.replicas)
+                                     n_replicas=sc.replicas,
+                                     breaker=sc.breaker)
             else:
                 engine = PredictionEngine(params, cfg,
                                           engine_cfg or EngineConfig())
         self.engine = engine
+        self._fleet = hasattr(engine, "submit_bin")
         self._cache = (PredictionCache(sc.cache_size)
                        if sc.cache_size else None)
+        self._quarantine = (QuarantineList(sc.quarantine_size)
+                            if sc.quarantine_size else None)
         self._queue = RequestQueue(max_size=sc.max_queue,
                                    batch_hint=sc.max_batch_graphs,
                                    shed_policy=sc.shed_policy)
@@ -219,13 +296,40 @@ class PredictionService:
         self._shed = 0
         self._batches = 0
         self._bins = 0
+        self._deadline_expired = 0
+        self._poisoned = 0
+        self._bisect_runs = 0
+        self._invalid = 0
         self._latencies: deque = deque(maxlen=self.serve_cfg.latency_window)
         self._worker = threading.Thread(
             target=self._run, name="dippm-serve-batcher", daemon=True)
         self._worker.start()
 
     # -- submission ----------------------------------------------------------
-    def submit(self, g: OpGraph) -> PredictionFuture:
+    def _deadline_at(self, deadline_ms: Optional[float]) -> Optional[float]:
+        """Absolute ``perf_counter`` deadline for a submit happening now
+        (per-call override, else ``ServeConfig.default_deadline_ms``)."""
+        ms = (deadline_ms if deadline_ms is not None
+              else self.serve_cfg.default_deadline_ms)
+        return None if ms is None else time.perf_counter() + ms / 1e3
+
+    def _quarantine_fastfail(self, fp: str) -> Optional[PredictionFuture]:
+        """Already-rejected future if ``fp`` is quarantined, else None.
+        The caller owns the counter updates (submit vs submit_many
+        account differently)."""
+        if self._quarantine is None:
+            return None
+        cause = self._quarantine.check(fp)
+        if cause is None:
+            return None
+        fut = PredictionFuture()
+        fut._reject(PoisonRequestError(
+            f"request fast-failed: fingerprint {fp[:16]}… is quarantined "
+            f"as bin poison (recorded cause: {cause})"))
+        return fut
+
+    def submit(self, g: OpGraph,
+               deadline_ms: Optional[float] = None) -> PredictionFuture:
         """Enqueue one graph; returns immediately with a future.
 
         With caching on, the canonical fingerprint is checked first:
@@ -233,38 +337,80 @@ class PredictionService:
         (bit-equal to the cold path — the cached vector is the cold
         path's output); an in-flight duplicate attaches to its leader
         and never occupies a queue slot. Only genuine misses are
-        featurized and enqueued. Raises
+        featurized and enqueued. A quarantined fingerprint returns an
+        already-rejected future
+        (:class:`~repro.serve.lifecycle.PoisonRequestError`).
+        ``deadline_ms`` (else ``ServeConfig.default_deadline_ms``)
+        bounds how long the request may wait before it is rejected with
+        :class:`~repro.serve.lifecycle.DeadlineExceededError`. Raises
         :class:`~repro.serve.queue.QueueFullError` under admission
-        control and ``RuntimeError`` after :meth:`close`.
+        control and
+        :class:`~repro.serve.lifecycle.ServiceDrainingError` after
+        :meth:`drain` / :meth:`close`.
         """
+        # admission stops at drain for EVERY path — a cache hit or
+        # quarantine fast-fail must not slip past a closed queue
+        if self._queue.closed:
+            raise ServiceDrainingError(
+                "PredictionService is closed (draining) — not "
+                "accepting new requests")
         meta = dict(g.meta)
-        if self._cache is not None:
+        deadline = self._deadline_at(deadline_ms)
+        fp = None
+        flight = None
+        if self._cache is not None or self._quarantine is not None:
             fp = g.fingerprint()
+            fut = self._quarantine_fastfail(fp)
+            if fut is not None:
+                with self._state:
+                    self._submitted += 1
+                    self._failed += 1
+                return fut
+        if self._cache is not None:
             fut = PredictionFuture()
-            waiter = CacheWaiter(fut, meta, time.perf_counter())
-            status, y = self._cache.claim(fp, waiter)
+            waiter = CacheWaiter(fut, meta, time.perf_counter(), deadline)
+            status, y, flight = self._cache.claim(fp, waiter)
             if status != "leader":
                 with self._state:
                     self._submitted += 1
                 if status == "hit":
                     self._resolve_waiter(waiter, y)
                 return fut
-        else:
-            fp = None
         ecfg = self.engine.engine_cfg
         sample = sample_from_graph(g, buckets=ecfg.buckets,
                                    extended_static=ecfg.extended_static)
-        return self._submit_sample(sample, meta, fp)
+        return self._submit_sample(sample, meta, fp, flight, deadline)
 
-    def submit_json(self, doc: Dict[str, Any]) -> PredictionFuture:
+    def submit_json(self, doc: Dict[str, Any],
+                    deadline_ms: Optional[float] = None
+                    ) -> PredictionFuture:
         """Enqueue a portable serialized graph (``repro.opgraph.v1`` or
-        a raw exporter node list) — the ``from_json`` frontend."""
+        a raw exporter node list) — the ``from_json`` frontend.
+
+        A structurally invalid document returns an already-rejected
+        future carrying :class:`~repro.core.ir.GraphValidationError`
+        (with node-level context) without touching the queue — callers
+        handling a stream of foreign payloads get one uniform
+        future-based error surface instead of a mix of raises and
+        rejections.
+        """
         from ..core.frontends import from_json
-        return self.submit(from_json(doc))
+        try:
+            g = from_json(doc)
+        except GraphValidationError as e:
+            fut = PredictionFuture()
+            fut._reject(e)
+            with self._state:
+                self._submitted += 1
+                self._failed += 1
+                self._invalid += 1
+            return fut
+        return self.submit(g, deadline_ms=deadline_ms)
 
     def submit_jax(self, forward, param_specs, *input_specs,
                    batch: Optional[int] = None,
-                   meta: Optional[Dict[str, Any]] = None
+                   meta: Optional[Dict[str, Any]] = None,
+                   deadline_ms: Optional[float] = None
                    ) -> PredictionFuture:
         """Trace a JAX callable abstractly and enqueue it — the
         ``from_jax`` frontend (tracing happens on the caller's thread)."""
@@ -273,18 +419,20 @@ class PredictionService:
         if batch is not None:
             m.setdefault("batch", batch)
         return self.submit(from_jax(forward, param_specs, *input_specs,
-                                    meta=m))
+                                    meta=m), deadline_ms=deadline_ms)
 
-    def _submit_sample(self, sample, meta,
-                       fp: Optional[str] = None) -> PredictionFuture:
+    def _submit_sample(self, sample, meta, fp: Optional[str] = None,
+                       flight=None,
+                       deadline: Optional[float] = None
+                       ) -> PredictionFuture:
         try:
-            req = self._queue.put(sample, meta, fp)
-        except QueueFullError as e:
+            req = self._queue.put(sample, meta, fp, flight, deadline)
+        except (QueueFullError, ServiceDrainingError) as e:
             # this request was the single-flight leader — clear the
             # flight (a leaked one would strand every future duplicate)
             # and reject any follower that attached in the meantime
             if self._cache is not None and fp is not None:
-                followers = self._cache.abort(fp)
+                followers = self._cache.abort(fp, flight)
                 for w in followers:
                     w.future._reject(e)
                 with self._state:
@@ -297,78 +445,102 @@ class PredictionService:
             self._submitted += 1
         return req.future
 
-    def submit_many(self, graphs: Sequence[OpGraph]
+    def submit_many(self, graphs: Sequence[OpGraph],
+                    deadline_ms: Optional[float] = None
                     ) -> List[PredictionFuture]:
         """Enqueue a burst atomically — one queue transaction, so the
         batcher plans the whole burst into the same bins a direct
         engine sweep would (no fragmentation across drains while late
         members are still featurizing). With caching on, duplicates
         inside the burst (and against the store) collapse first — only
-        distinct uncached graphs occupy queue slots. All-or-nothing
-        under admission control: a rejected burst enqueues nothing (its
-        cache claims are rolled back)."""
+        distinct uncached graphs occupy queue slots; quarantined
+        fingerprints come back as already-rejected futures without
+        occupying slots either. All-or-nothing under admission control:
+        a rejected burst enqueues nothing (its cache claims are rolled
+        back). ``deadline_ms`` applies uniformly to every member."""
+        if self._queue.closed:
+            raise ServiceDrainingError(
+                "PredictionService is closed (draining) — not "
+                "accepting new requests")
         ecfg = self.engine.engine_cfg
-        if self._cache is None:
-            items = [(sample_from_graph(g, buckets=ecfg.buckets,
-                                        extended_static=ecfg.extended_static),
-                      dict(g.meta)) for g in graphs]
-            try:
-                reqs = self._queue.put_many(items)
-            except QueueFullError:
-                with self._state:
-                    self._rejected += len(items)
-                raise
-            with self._state:
-                self._submitted += len(reqs)
-            return [r.future for r in reqs]
-        # claim every graph first: hits/followers resolve without queue
-        # slots, leaders featurize and enqueue in one transaction
-        slots = []          # ("hit", waiter, y) | ("follower", fut, None)
-        items = []          # leaders: (sample, meta, fp)
+        deadline = self._deadline_at(deadline_ms)
+
+        def _featurize(g):
+            return sample_from_graph(g, buckets=ecfg.buckets,
+                                     extended_static=ecfg.extended_static)
+
+        # route every graph first: quarantined → already-rejected
+        # future, hits/followers resolve without queue slots, leaders
+        # featurize and enqueue in one transaction
+        slots = []   # ("leader", item_idx, _) | ("hit"/"follower",
+        #              waiter, y) | ("fastfail", fut, _)
+        items = []   # leaders: (sample, meta, fp, flight, deadline)
+        n_fast = 0
         for g in graphs:
-            fp = g.fingerprint()
             meta = dict(g.meta)
-            fut = PredictionFuture()
-            waiter = CacheWaiter(fut, meta, time.perf_counter())
-            status, y = self._cache.claim(fp, waiter)
-            if status == "leader":
-                sample = sample_from_graph(
-                    g, buckets=ecfg.buckets,
-                    extended_static=ecfg.extended_static)
+            fp = None
+            if self._cache is not None or self._quarantine is not None:
+                fp = g.fingerprint()
+                fut = self._quarantine_fastfail(fp)
+                if fut is not None:
+                    slots.append(("fastfail", fut, None))
+                    n_fast += 1
+                    continue
+            if self._cache is None:
                 slots.append(("leader", len(items), None))
-                items.append((sample, meta, fp))
+                items.append((_featurize(g), meta, fp, None, deadline))
+                continue
+            fut = PredictionFuture()
+            waiter = CacheWaiter(fut, meta, time.perf_counter(), deadline)
+            status, y, flight = self._cache.claim(fp, waiter)
+            if status == "leader":
+                slots.append(("leader", len(items), None))
+                items.append((_featurize(g), meta, fp, flight, deadline))
             else:
                 slots.append((status, waiter, y))
         try:
             reqs = self._queue.put_many(items)
-        except QueueFullError as e:
-            n_rej = len(graphs)
-            for _, _, fp in items:
-                for w in self._cache.abort(fp):
-                    w.future._reject(e)
-                    n_rej += 1
+        except (QueueFullError, ServiceDrainingError) as e:
+            n_rej = len(graphs) - n_fast
+            if self._cache is not None:
+                for _, _, fp, flight, _ in items:
+                    for w in self._cache.abort(fp, flight):
+                        w.future._reject(e)
+                        n_rej += 1
             with self._state:
                 self._rejected += n_rej
             raise
         with self._state:
             self._submitted += len(graphs)
+            self._failed += n_fast
         futs: List[PredictionFuture] = []
         for kind, ref, y in slots:
             if kind == "leader":
                 futs.append(reqs[ref].future)
+            elif kind == "fastfail":
+                futs.append(ref)
             else:
                 if kind == "hit":
                     self._resolve_waiter(ref, y)
                 futs.append(ref.future)
         return futs
 
-    # -- cache / shed plumbing -----------------------------------------------
+    # -- cache / shed / lifecycle plumbing -----------------------------------
     def _resolve_waiter(self, w: CacheWaiter, y,
                         t_done: Optional[float] = None) -> None:
         """Resolve one cache hit / coalesced follower from a raw target
-        vector (per-request meta, per-request latency)."""
+        vector (per-request meta, per-request latency). A follower whose
+        own deadline passed while parked is rejected instead — nobody is
+        waiting on that future anymore."""
         from ..core.predictor import make_prediction
         t_done = time.perf_counter() if t_done is None else t_done
+        if w.deadline is not None and t_done >= w.deadline:
+            w.future._reject(DeadlineExceededError(
+                "request deadline expired while parked as a cache "
+                "follower on an in-flight duplicate"))
+            with self._state:
+                self._deadline_expired += 1
+            return
         lat_ms = (t_done - w.t_submit) * 1e3
         try:
             pred = make_prediction(np.asarray(y), meta=w.meta)
@@ -385,15 +557,41 @@ class PredictionService:
     def _fail_request(self, r: Request, e: BaseException) -> None:
         """Reject a queued request AND settle its cache flight: abort
         the fingerprint (next duplicate becomes a fresh leader) and
-        reject any followers riding on it. Idempotent."""
+        reject any followers riding on it. The abort is scoped to this
+        request's flight token, so it can never tear down a successor
+        flight a retry has since opened. Idempotent."""
         if not r.future.done():
             r.future._reject(e)
         if self._cache is not None and r.fp is not None:
-            for w in self._cache.abort(r.fp):
+            for w in self._cache.abort(r.fp, r.flight):
                 if not w.future.done():
                     w.future._reject(e)
                     with self._state:
                         self._failed += 1
+
+    def _expire_request(self, r: Request,
+                        e: Optional[BaseException] = None,
+                        stage: str = "waiting in the queue") -> None:
+        """Reject a request whose deadline passed at a waiting stage
+        (and its followers — their leader will never run). Counts every
+        rejection under ``deadline_expired``."""
+        if e is None:
+            e = DeadlineExceededError(
+                f"request deadline expired {stage} "
+                f"(deadline_ms elapsed before the engine ran it)")
+        n = 0
+        if not r.future.done():
+            r.future._reject(e)
+            n += 1
+        if self._cache is not None and r.fp is not None:
+            for w in self._cache.abort(r.fp, r.flight):
+                if not w.future.done():
+                    w.future._reject(DeadlineExceededError(
+                        "single-flight leader's deadline expired before "
+                        "dispatch; resubmit to become a fresh leader"))
+                    n += 1
+        with self._state:
+            self._deadline_expired += n
 
     def _on_shed(self, shed: List[Request]) -> None:
         """Queue hook (runs on the *admitting* caller's thread, after
@@ -407,7 +605,7 @@ class PredictionService:
                 r.future._reject(e)
                 n += 1
             if self._cache is not None and r.fp is not None:
-                for w in self._cache.abort(r.fp):
+                for w in self._cache.abort(r.fp, r.flight):
                     if not w.future.done():
                         w.future._reject(e)
                         n += 1
@@ -467,11 +665,29 @@ class PredictionService:
             return len(packed_rung_ladder(nb, eb, gb))
         return len(self.engine.engine_cfg.buckets)
 
-    def close(self, timeout: Optional[float] = 10.0) -> None:
-        """Refuse new requests, drain the queue, stop the batcher (and
-        the replica pool, when the service built it)."""
+    @property
+    def draining(self) -> bool:
+        """True once :meth:`drain` / :meth:`close` stopped admission."""
+        return self._queue.closed
+
+    def drain(self, timeout: Optional[float] = 10.0) -> bool:
+        """Graceful drain: stop admission and settle everything in
+        flight. New submits raise
+        :class:`~repro.serve.lifecycle.ServiceDrainingError`; requests
+        already accepted are flushed through the engine — each future
+        resolves with its result, a typed error, or
+        ``DeadlineExceededError`` if its deadline passes first. Returns
+        True when the batcher finished within ``timeout`` (the engine is
+        NOT released — :meth:`close` does that). Idempotent.
+        """
         self._queue.close()
         self._worker.join(timeout)
+        return not self._worker.is_alive()
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """:meth:`drain`, then release the engine (replica pool
+        included) when the service built it."""
+        self.drain(timeout)
         if self._owns_engine and hasattr(self.engine, "close"):
             self.engine.close()
 
@@ -491,12 +707,23 @@ class PredictionService:
             lat = np.asarray(self._latencies, dtype=np.float64)
             batches = self._batches
             occupancy = (self._engine_done / batches) if batches else 0.0
+            q = self._quarantine
             return ServeStats(
                 submitted=self._submitted,
                 completed=self._completed,
                 rejected=self._rejected,
                 failed=self._failed,
                 shed_count=self._shed,
+                deadline_expired=self._deadline_expired,
+                poisoned=self._poisoned,
+                bisect_runs=self._bisect_runs,
+                quarantine_fastfail=q.fastfails if q is not None else 0,
+                quarantine_entries=len(q) if q is not None else 0,
+                invalid=self._invalid,
+                draining=self._queue.closed,
+                breaker_states=tuple(
+                    getattr(self.engine, "breaker_states", ())),
+                revivals=getattr(self.engine, "revivals", 0),
                 batches=batches,
                 bins=self._bins,
                 queue_depth=len(self._queue),
@@ -539,12 +766,135 @@ class PredictionService:
                 for r in batch:
                     self._fail_request(r, e)
 
+    @staticmethod
+    def _infra_error(e: BaseException) -> bool:
+        """Failures caused by the *service*, not the request content —
+        they must never quarantine the bin's riders (re-running the same
+        graphs on a healthy fleet would succeed)."""
+        return isinstance(e, (NoHealthyReplicaError, DeadlineExceededError))
+
+    def _run_bin_sync(self, chunk, deadline: Optional[float]):
+        """One synchronous bin dispatch; the fleet backend also gets
+        the bin deadline so its requeue loop can stop once every rider
+        has expired."""
+        if self._fleet:
+            return self.engine.run_bin(chunk, deadline)
+        return self.engine.run_bin(chunk)
+
+    def _prune_bin(self, idx, live: List[Request], bin_err
+                   ) -> Tuple[List[int], Optional[float]]:
+        """Drop bin members whose deadline passed while staged behind
+        earlier bins; returns the survivors and the bin's dispatch
+        deadline — the *latest* member deadline (``None`` when any
+        member waits forever), since the bin is worth retrying as long
+        as anyone aboard still has time."""
+        now = time.perf_counter()
+        keep: List[int] = []
+        deadlines: List[float] = []
+        unbounded = False
+        for j in idx:
+            r = live[j]
+            if r.expired(now):
+                bin_err[j] = DeadlineExceededError(
+                    "request deadline expired while staged behind "
+                    "earlier bins of the same drain")
+                continue
+            keep.append(j)
+            if r.deadline is None:
+                unbounded = True
+            else:
+                deadlines.append(r.deadline)
+        bin_deadline = (None if unbounded or not deadlines
+                        else max(deadlines))
+        return keep, bin_deadline
+
+    def _recover_chunk(self, js: List[int], samples, ys, bin_err,
+                       deadline: Optional[float], exc: BaseException,
+                       live: List[Request]) -> None:
+        """A dispatched bin failed with ``exc`` — settle every rider.
+
+        Infrastructure errors (no healthy replica, bin deadline blown in
+        the requeue loop) fail the whole chunk: the riders are innocent
+        and re-running them cannot help right now. Anything else under
+        ``poison_policy="bisect"`` is split-retried: parts that pass
+        complete their riders normally, and each singleton that still
+        fails is the isolated poison — it alone fails (with
+        ``PoisonRequestError``) and its fingerprint is quarantined.
+
+        The split is hint-guided: ``PredictionInvalidError.bad_rows``
+        (when it names a proper subset of the chunk) splits suspects
+        from the rest — typically 1 pass for the innocents plus one run
+        per suspect. The hint is *advisory only* (in packed bins NaNs
+        can bleed across rows through the shared one-hot matmuls):
+        every condemnation still requires the singleton itself to fail
+        its own execution, and a useless hint falls back to plain
+        halving — O(log n) sub-bin runs per poison. Either way this
+        replaces the old contract where the whole bin failed.
+        """
+        if (not js or self._infra_error(exc)
+                or self.serve_cfg.poison_policy != "bisect"):
+            for j in js:
+                bin_err[j] = exc
+            return
+        stack: List[Tuple[List[int], BaseException]] = [(list(js), exc)]
+        while stack:
+            cur, err = stack.pop()
+            if len(cur) == 1:
+                # this request failed a run of its own (the initial
+                # chunk, or its singleton sub-bin below) — condemned
+                j = cur[0]
+                pe = PoisonRequestError(
+                    f"request isolated as bin poison by split-retry: "
+                    f"{type(err).__name__}: {err}")
+                pe.__cause__ = err
+                bin_err[j] = pe
+                r = live[j]
+                if self._quarantine is not None and r.fp is not None:
+                    self._quarantine.record(r.fp, err)
+                with self._state:
+                    self._poisoned += 1
+                continue
+            parts = None
+            if isinstance(err, PredictionInvalidError) and err.bad_rows:
+                bad = {k for k in err.bad_rows if 0 <= k < len(cur)}
+                if 0 < len(bad) < len(cur):
+                    suspects = [cur[k] for k in sorted(bad)]
+                    rest = [cur[k] for k in range(len(cur))
+                            if k not in bad]
+                    parts = (suspects, rest)
+            if parts is None:
+                mid = len(cur) // 2
+                parts = (cur[:mid], cur[mid:])
+            for part in parts:
+                with self._state:
+                    self._bisect_runs += 1
+                try:
+                    ys[part] = self._run_bin_sync(
+                        [samples[j] for j in part], deadline)
+                except Exception as e2:
+                    if self._infra_error(e2):
+                        for j in part:
+                            bin_err[j] = e2
+                    else:
+                        stack.append((part, e2))
+
     def _process(self, batch: List[Request]) -> None:
         from ..core.predictor import make_prediction
         lats: List[float] = []
         done = failed = n_bins = 0
         try:
-            samples = [r.sample for r in batch]
+            # deadline sweep at drain time: requests that expired while
+            # queued never cost a bin slot
+            now = time.perf_counter()
+            live: List[Request] = []
+            for r in batch:
+                if r.expired(now):
+                    self._expire_request(r)
+                else:
+                    live.append(r)
+            if not live:
+                return
+            samples = [r.sample for r in live]
             # plan once, dispatch each bin through the thread-safe
             # run_bin (bin count tracked locally — the engine may be
             # shared with concurrent direct callers, so diffing its
@@ -553,37 +903,48 @@ class PredictionService:
             n_bins = len(bins)
             ys = np.zeros((len(samples), self.engine.cfg.n_targets),
                           dtype=np.float32)
-            # a failed bin fails only its own requests (the fleet has
-            # already exhausted requeue-on-healthy-replicas by the time
-            # an error surfaces here)
+            # a failed bin settles only its own riders — and with
+            # poison_policy="bisect" only the isolated offenders (the
+            # fleet has already exhausted requeue-on-healthy-replicas
+            # by the time an error surfaces here)
             bin_err: List[Optional[BaseException]] = [None] * len(samples)
-            submit_bin = getattr(self.engine, "submit_bin", None)
-            if submit_bin is not None and n_bins > 1:
+            if self._fleet and n_bins > 1:
                 # fleet backend: fan this drain's bins out so they run
                 # on the replicas concurrently
-                futs = [(idx, submit_bin([samples[j] for j in idx]))
-                        for idx in bins]
-                for idx, f in futs:
+                futs = []
+                for idx in bins:
+                    keep, bin_dl = self._prune_bin(idx, live, bin_err)
+                    if keep:
+                        futs.append((keep, bin_dl, self.engine.submit_bin(
+                            [samples[j] for j in keep], bin_dl)))
+                for keep, bin_dl, f in futs:
                     try:
-                        ys[idx] = f.result()
+                        ys[keep] = f.result()
                     except Exception as e:
-                        for j in idx:
-                            bin_err[j] = e
+                        self._recover_chunk(keep, samples, ys, bin_err,
+                                            bin_dl, e, live)
             else:
                 for idx in bins:
+                    keep, bin_dl = self._prune_bin(idx, live, bin_err)
+                    if not keep:
+                        continue
                     try:
-                        ys[idx] = self.engine.run_bin(
-                            [samples[j] for j in idx])
+                        ys[keep] = self._run_bin_sync(
+                            [samples[j] for j in keep], bin_dl)
                     except Exception as e:
-                        for j in idx:
-                            bin_err[j] = e
+                        self._recover_chunk(keep, samples, ys, bin_err,
+                                            bin_dl, e, live)
             t_done = time.perf_counter()
             # batch is FIFO-drained, so walking it resolves futures in
             # submission order; ys is already scattered to batch order
-            for j, (r, y) in enumerate(zip(batch, ys)):
-                if bin_err[j] is not None:
-                    self._fail_request(r, bin_err[j])
-                    failed += 1
+            for j, (r, y) in enumerate(zip(live, ys)):
+                err = bin_err[j]
+                if err is not None:
+                    if isinstance(err, DeadlineExceededError):
+                        self._expire_request(r, err)
+                    else:
+                        self._fail_request(r, err)
+                        failed += 1
                     continue
                 lat_ms = (t_done - r.t_submit) * 1e3
                 try:
@@ -597,8 +958,9 @@ class PredictionService:
                 r.future._resolve(pred, lat_ms)
                 if self._cache is not None and r.fp is not None:
                     # populate the cache and release this fingerprint's
-                    # coalesced followers with the same vector
-                    for w in self._cache.complete(r.fp, y):
+                    # coalesced followers with the same vector (scoped
+                    # to this request's flight token)
+                    for w in self._cache.complete(r.fp, y, r.flight):
                         self._resolve_waiter(w, y, t_done)
         except Exception as e:                  # resolve, never hang callers
             for r in batch:

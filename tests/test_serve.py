@@ -460,8 +460,12 @@ def test_cache_failed_leader_aborts_flight_and_next_retry_succeeds(
         packed_dippm, monkeypatch):
     """A leader whose bin fails must clear the in-flight slot: its
     followers reject with the same error, and the NEXT duplicate becomes
-    a fresh leader that can succeed once the engine recovers."""
-    svc = packed_dippm.serve(max_wait_ms=30_000.0, max_batch_graphs=1024)
+    a fresh leader that can succeed once the engine recovers.
+    (quarantine_size=None: with quarantine on, the deterministic-failure
+    retry would fast-fail at the door instead of re-reaching the engine
+    — that path has its own test in test_lifecycle.py.)"""
+    svc = packed_dippm.serve(max_wait_ms=30_000.0, max_batch_graphs=1024,
+                             quarantine_size=None)
     try:
         orig = svc.engine.run_bin
         state = {"fail": True}
