@@ -28,15 +28,34 @@ def timed(fn, *args, repeats: int = 3, **kw):
 
 _DATASET_CACHE: Dict[str, list] = {}
 
+DATASETS_DIR = os.environ.get("REPRO_DATASETS_DIR", "artifacts/datasets")
+
+
+def bench_factory_config(n_graphs: int = 240, seed: int = 0):
+    """The shared benchmark dataset recipe (convnext held out)."""
+    from repro.dataset.factory import FactoryConfig
+    return FactoryConfig(n_graphs=n_graphs, seed=seed,
+                         shard_size=max(32, min(256, n_graphs // 4)),
+                         extra_families=("convnext",))
+
 
 def bench_dataset(n_graphs: int = 240, seed: int = 0):
-    """Build (or reuse) the benchmark dataset, with convnext held out."""
+    """Build (or reuse) the benchmark dataset via the sharded factory.
+
+    The dataset lives on disk under ``REPRO_DATASETS_DIR`` keyed by its
+    plan hash, so repeat runs (and CI, which caches the directory on the
+    same hash) verify shard checksums and skip tracing entirely.
+    """
     key = f"{n_graphs}-{seed}"
     if key in _DATASET_CACHE:
         return _DATASET_CACHE[key]
-    from repro.dataset.builder import build_dataset
-    recs = build_dataset(n_graphs=n_graphs, seed=seed,
-                         extra_families=("convnext",))
+    from repro.dataset.factory import build, iter_records
+    cfg = bench_factory_config(n_graphs, seed)
+    from repro.dataset.factory import plan_hash as _ph
+    out_dir = os.path.join(DATASETS_DIR, f"bench-{_ph(cfg)[:16]}")
+    build(out_dir, cfg, workers=int(os.environ.get("REPRO_BUILD_WORKERS",
+                                                   "1")))
+    recs = list(iter_records(out_dir))
     _DATASET_CACHE[key] = recs
     return recs
 

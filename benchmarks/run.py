@@ -24,10 +24,11 @@ def main() -> None:
     n_graphs = args.n_graphs or (1200 if args.full else 240)
     epochs = args.epochs or (60 if args.full else 25)
 
-    from . import (chaos_resilience, engine_throughput, fig3_mig_memory,
-                   fig4_scatter, fused_mp, microbench, packed_batching,
-                   roofline_report, serving_fleet, serving_latency, sparse_mp,
-                   table2_dataset, table4_gnn, table5_mig, train_throughput)
+    from . import (accuracy_mape, chaos_resilience, engine_throughput,
+                   fig3_mig_memory, fig4_scatter, fused_mp, microbench,
+                   packed_batching, roofline_report, serving_fleet,
+                   serving_latency, sparse_mp, table2_dataset, table4_gnn,
+                   table5_mig, train_throughput)
 
     jobs = {
         "microbench": lambda: microbench.run(),
@@ -40,6 +41,7 @@ def main() -> None:
         "serving_fleet": lambda: serving_fleet.run(),
         "chaos": lambda: chaos_resilience.run(),
         "table2": lambda: table2_dataset.run(n_graphs=n_graphs),
+        "accuracy_mape": lambda: accuracy_mape.run(full=args.full),
         "table4": lambda: table4_gnn.run(n_graphs=n_graphs, epochs=epochs),
         "table5": lambda: table5_mig.run(n_graphs=n_graphs,
                                          epochs=max(epochs, 12)),

@@ -1,18 +1,23 @@
-"""End-to-end driver: build the DIPPM dataset, train the PMGNS predictor
-for a few hundred steps, evaluate MAPE per target, save the predictor.
+"""End-to-end driver: factory-build the DIPPM dataset, train the PMGNS
+predictor, evaluate MAPE per target, save the predictor.
 
     PYTHONPATH=src python examples/train_dippm.py --n-graphs 400 --epochs 20
 
-Long runs survive interruption: pass ``--checkpoint-dir artifacts/ckpt``
-and re-run the same command after a kill — training resumes from the
-latest committed checkpoint and finishes as if uninterrupted (see
-docs/training.md).
+The dataset is built by the sharded ``repro.dataset.factory`` under
+``artifacts/datasets`` keyed by plan hash: interrupted builds resume
+from committed shards, repeat runs verify checksums and skip tracing,
+and ``--workers N`` parallelises tracing across processes. Long
+training runs survive interruption too: pass ``--checkpoint-dir
+artifacts/ckpt`` and re-run the same command after a kill (see
+docs/training.md and docs/dataset.md).
 """
 import argparse
+import os
 
 from repro.core import PMGNSConfig, DIPPM
-from repro.dataset.builder import (build_dataset, records_to_samples,
-                                   save_dataset, split_dataset)
+from repro.dataset.builder import records_to_samples, split_dataset
+from repro.dataset.factory import (FactoryConfig, build, iter_records,
+                                   plan_hash)
 from repro.train.gnn_trainer import TrainConfig, evaluate, train_pmgns
 
 
@@ -24,17 +29,30 @@ def main():
     ap.add_argument("--lr", type=float, default=2.754e-5 * 400)
     ap.add_argument("--variant", default="graphsage")
     ap.add_argument("--out", default="artifacts/dippm.npz")
-    ap.add_argument("--save-dataset", default=None)
+    ap.add_argument("--dataset-dir", default=None,
+                    help="factory dataset directory "
+                         "(default: artifacts/datasets/train-<planhash>)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="worker processes for the dataset build")
+    ap.add_argument("--lm-archs", nargs="*", default=(),
+                    help="LLM configs to trace into the dataset, e.g. "
+                         "qwen2.5-3b mamba2-370m")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="checkpoint every epoch here and resume from it")
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard the batch axis over all local devices")
     args = ap.parse_args()
 
-    recs = build_dataset(n_graphs=args.n_graphs, seed=0,
-                         extra_families=("convnext",), progress_every=100)
-    if args.save_dataset:
-        save_dataset(recs, args.save_dataset)
+    ds_cfg = FactoryConfig(n_graphs=args.n_graphs, seed=0,
+                           extra_families=("convnext",),
+                           lm_archs=tuple(args.lm_archs))
+    out_dir = args.dataset_dir or os.path.join(
+        "artifacts", "datasets", f"train-{plan_hash(ds_cfg)[:16]}")
+    res = build(out_dir, ds_cfg, workers=args.workers, progress=True)
+    print(f"dataset: {res.n_built}/{res.n_planned} graphs, "
+          f"{res.n_shards} shards ({res.shards_reused} reused), "
+          f"{res.n_skipped} skipped → {out_dir}")
+    recs = list(iter_records(out_dir))
     sp = split_dataset(recs, seed=0)
     print({k: len(v) for k, v in sp.items()})
 

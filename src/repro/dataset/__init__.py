@@ -1,3 +1,8 @@
-from .builder import (DatasetRecord, build_dataset, load_dataset,
-                      save_dataset, split_dataset, records_to_samples,
-                      synthetic_samples)
+from .builder import (DatasetBuildResult, DatasetRecord, SkipRecord,
+                      build_dataset, load_dataset, record_fingerprint,
+                      save_dataset, split_assignment, split_dataset,
+                      records_to_samples, synthetic_samples)
+from .factory import (FactoryBuildResult, FactoryConfig, FactoryPlan,
+                      PlanMismatchError, build, iter_records,
+                      load_factory_dataset, make_plan, plan_hash,
+                      read_manifest, read_plan)

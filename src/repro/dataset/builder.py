@@ -20,7 +20,9 @@ TPU-friendly training layout is materialized per batch inside
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import logging
 import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -32,6 +34,8 @@ from ..core.static_features import static_features
 from ..perfmodel.cost_model import estimate
 from ..perfmodel.devices import DEVICES
 from ..zoo.families import TABLE2_FRACTIONS, family_variants, trace_family
+
+log = logging.getLogger("repro.dataset")
 
 DATASET_VERSION = "dippm-ds-v1"
 
@@ -47,6 +51,44 @@ class DatasetRecord:
     meta: Dict = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class SkipRecord:
+    """One failed variant trace — structured, so shrinkage is auditable."""
+    family: str
+    cfg: Dict
+    error: str        # exception type name
+    message: str
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class DatasetBuildResult(List[DatasetRecord]):
+    """``build_dataset``'s return value: the records, plus skip accounting.
+
+    A plain ``list`` subclass so every existing caller keeps working;
+    ``.skips`` carries the structured skip records and
+    ``.skips_by_family()`` the per-family × per-error counters that
+    :func:`save_dataset` surfaces in the manifest.
+    """
+
+    def __init__(self, records: Sequence[DatasetRecord] = (),
+                 skips: Sequence[SkipRecord] = ()):
+        super().__init__(records)
+        self.skips: List[SkipRecord] = list(skips)
+
+    @property
+    def n_skipped(self) -> int:
+        return len(self.skips)
+
+    def skips_by_family(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for sk in self.skips:
+            fam = out.setdefault(sk.family, {})
+            fam[sk.error] = fam.get(sk.error, 0) + 1
+        return out
+
+
 def _trace_and_label(family: str, cfg: Dict, device_name: str,
                      noise_sigma: float) -> DatasetRecord:
     g = trace_family(family, cfg)
@@ -58,7 +100,8 @@ def _trace_and_label(family: str, cfg: Dict, device_name: str,
         y=est.as_targets(),
         family=family,
         n_nodes=g.num_nodes,
-        meta={"batch": cfg["batch"], "res": cfg["res"]},
+        meta={"batch": cfg["batch"], "res": cfg["res"],
+              "fingerprint": g.fingerprint()},
     )
 
 
@@ -70,11 +113,18 @@ def build_dataset(
     fractions: Optional[Dict[str, float]] = None,
     extra_families: Sequence[str] = (),
     progress_every: int = 0,
-) -> List[DatasetRecord]:
+) -> DatasetBuildResult:
     """Build ``n_graphs`` records following the Table-2 family mix.
 
     ``extra_families`` (e.g. ``("convnext",)``) are built *in addition*, one
     share each, and tagged so they can be held out (Table 5 "unseen").
+
+    Returns a :class:`DatasetBuildResult` (a ``list`` of records whose
+    ``.skips`` holds a :class:`SkipRecord` per failed variant trace) so
+    silent dataset shrinkage is visible to callers and manifests.
+
+    This is the small/in-memory path; paper-scale builds go through the
+    sharded, resumable, multi-worker ``repro.dataset.factory``.
     """
     fractions = dict(fractions or TABLE2_FRACTIONS)
     rng = np.random.default_rng(seed)
@@ -88,15 +138,20 @@ def build_dataset(
             plan.append((fam, family_variants(fam, rng)))
     rng.shuffle(plan)
 
-    records: List[DatasetRecord] = []
+    result = DatasetBuildResult()
     for i, (fam, cfg) in enumerate(plan):
         try:
-            records.append(_trace_and_label(fam, cfg, device_name, noise_sigma))
+            result.append(_trace_and_label(fam, cfg, device_name,
+                                           noise_sigma))
         except Exception as e:  # pragma: no cover — bad variant config
-            print(f"[dataset] skipping {fam} {cfg}: {e}")
+            result.skips.append(SkipRecord(
+                family=fam, cfg=cfg, error=type(e).__name__,
+                message=str(e)[:300]))
+            log.warning("skipping %s %s: %s: %s", fam, cfg,
+                        type(e).__name__, e)
         if progress_every and (i + 1) % progress_every == 0:
             print(f"[dataset] {i + 1}/{len(plan)} graphs traced")
-    return records
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -105,8 +160,20 @@ def build_dataset(
 
 def save_dataset(records: Sequence[DatasetRecord], path: str,
                  shard_size: int = 2048) -> None:
+    """Write the v1 (in-memory) shard format.
+
+    If ``records`` is a :class:`DatasetBuildResult`, its skip accounting
+    is recorded in the manifest (``n_skipped`` / ``skips_by_family`` /
+    ``skips``) so a saved dataset carries the evidence of any shrinkage.
+    Paper-scale builds should use ``repro.dataset.factory`` instead —
+    sharded v2 layout, resumable, never holds the dataset in RAM.
+    """
     os.makedirs(path, exist_ok=True)
     manifest = {"version": DATASET_VERSION, "n": len(records), "shards": []}
+    if isinstance(records, DatasetBuildResult) and records.skips:
+        manifest["n_skipped"] = records.n_skipped
+        manifest["skips_by_family"] = records.skips_by_family()
+        manifest["skips"] = [sk.to_json() for sk in records.skips]
     for si in range(0, len(records), shard_size):
         shard = records[si:si + shard_size]
         arrs: Dict[str, np.ndarray] = {}
@@ -126,20 +193,33 @@ def save_dataset(records: Sequence[DatasetRecord], path: str,
 
 
 def load_dataset(path: str) -> List[DatasetRecord]:
+    """Load a saved dataset — v1 (this module) or v2 (factory) layout.
+
+    Factory-built datasets (``dippm-ds-v2``) are transparently routed to
+    the streaming reader, so ``load_dataset`` works on either format.
+    Every shard's npz handle is closed before the next shard opens.
+    """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    if manifest.get("version") != DATASET_VERSION:
-        raise ValueError("dataset version mismatch")
+    version = manifest.get("version")
+    if version == "dippm-ds-v2":
+        from .factory import load_factory_dataset
+        return load_factory_dataset(path)
+    if version != DATASET_VERSION:
+        raise ValueError(
+            f"dataset version mismatch at {path!r}: manifest says "
+            f"{version!r}, expected {DATASET_VERSION!r} (v1 builder "
+            f"layout) or 'dippm-ds-v2' (factory layout)")
     records: List[DatasetRecord] = []
     for sh in manifest["shards"]:
-        data = np.load(os.path.join(path, sh["file"]))
-        for i, meta in enumerate(sh["metas"]):
-            records.append(DatasetRecord(
-                x=data[f"x{i}"], edges=data[f"e{i}"], static=data[f"s{i}"],
-                y=data[f"y{i}"], family=meta["family"],
-                n_nodes=meta["n_nodes"],
-                meta={k: v for k, v in meta.items()
-                      if k not in ("family", "n_nodes")}))
+        with np.load(os.path.join(path, sh["file"])) as data:
+            for i, meta in enumerate(sh["metas"]):
+                records.append(DatasetRecord(
+                    x=data[f"x{i}"], edges=data[f"e{i}"],
+                    static=data[f"s{i}"], y=data[f"y{i}"],
+                    family=meta["family"], n_nodes=meta["n_nodes"],
+                    meta={k: v for k, v in meta.items()
+                          if k not in ("family", "n_nodes")}))
     return records
 
 
@@ -147,23 +227,66 @@ def load_dataset(path: str) -> List[DatasetRecord]:
 # splits + batching glue
 # ---------------------------------------------------------------------------
 
+def record_fingerprint(r: DatasetRecord) -> str:
+    """Canonical content hash for split assignment.
+
+    Prefers the traced graph's ``OpGraph.fingerprint()`` (stashed in
+    ``meta`` by the builder/factory); records from older datasets fall
+    back to a content hash of the stored arrays. Either way the value
+    depends only on the record itself, never on dataset size or order.
+    """
+    fp = r.meta.get("fingerprint")
+    if fp:
+        return str(fp)
+    h = hashlib.sha256()
+    for a in (r.x, r.edges, r.static, r.y):
+        arr = np.ascontiguousarray(a)
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    h.update(r.family.encode())
+    return h.hexdigest()
+
+
+def split_assignment(fingerprint: str, seed: int = 0,
+                     train: float = 0.70, val: float = 0.15) -> str:
+    """'train' | 'val' | 'test' from a record's canonical hash.
+
+    Membership is a pure function of ``(fingerprint, seed)``: growing
+    the dataset adds records to splits but never moves an existing
+    record between them (the paper's 70/15/15 becomes the *expected*
+    fraction rather than an exact count).
+    """
+    digest = hashlib.sha256(f"{fingerprint}|split|{seed}".encode()).digest()
+    u = int.from_bytes(digest[:8], "big") / float(2 ** 64)
+    if u < train:
+        return "train"
+    if u < train + val:
+        return "val"
+    return "test"
+
+
 def split_dataset(records: Sequence[DatasetRecord], seed: int = 0,
                   train: float = 0.70, val: float = 0.15,
                   holdout_families: Sequence[str] = ("convnext",),
                   ) -> Dict[str, List[DatasetRecord]]:
-    """Random 70/15/15 split (paper Table 3) + family holdout ("unseen")."""
-    rng = np.random.default_rng(seed)
-    main = [r for r in records if r.family not in holdout_families]
-    unseen = [r for r in records if r.family in holdout_families]
-    idx = rng.permutation(len(main))
-    n_tr = int(train * len(main))
-    n_va = int(val * len(main))
-    return {
-        "train": [main[i] for i in idx[:n_tr]],
-        "val": [main[i] for i in idx[n_tr:n_tr + n_va]],
-        "test": [main[i] for i in idx[n_tr + n_va:]],
-        "unseen": unseen,
-    }
+    """70/15/15 split (paper Table 3) + family holdout ("unseen").
+
+    Split membership is derived per record from its canonical
+    fingerprint hash (:func:`split_assignment`), not from a
+    size-dependent permutation — so adding records to a growing dataset
+    never reshuffles the existing train/val/test assignments, and a
+    model evaluated on "test" was never trained on those graphs even
+    across dataset versions.
+    """
+    out: Dict[str, List[DatasetRecord]] = {
+        "train": [], "val": [], "test": [], "unseen": []}
+    for r in records:
+        if r.family in holdout_families:
+            out["unseen"].append(r)
+        else:
+            out[split_assignment(record_fingerprint(r), seed,
+                                 train, val)].append(r)
+    return out
 
 
 def records_to_samples(records: Sequence[DatasetRecord],

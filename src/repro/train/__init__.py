@@ -1,1 +1,3 @@
 from .gnn_trainer import TrainConfig, train_pmgns, evaluate, predict_batch
+from .accuracy import (AccuracyProtocol, evaluate_per_family, run_accuracy,
+                       train_to_convergence)

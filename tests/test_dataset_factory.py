@@ -1,0 +1,290 @@
+"""Dataset factory: plan determinism, sharding edges, resume, streaming,
+and the builder satellites (structured skips, stable splits, handle
+hygiene)."""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.dataset import builder
+from repro.dataset.builder import (DatasetBuildResult, DatasetRecord,
+                                   load_dataset, record_fingerprint,
+                                   save_dataset, split_assignment,
+                                   split_dataset)
+from repro.dataset.factory import (FACTORY_VERSION, FactoryConfig,
+                                   PlanMismatchError, build, iter_records,
+                                   load_factory_dataset, make_plan,
+                                   plan_hash, read_manifest)
+
+#: small mixed config shared by most tests: zoo + held-out + one LLM arch
+CFG = FactoryConfig(n_graphs=12, seed=3, shard_size=5,
+                    extra_families=("convnext",),
+                    lm_archs=("mamba2-370m",))
+
+#: single-family config whose plan size is an exact shard multiple
+CFG_EXACT = FactoryConfig(n_graphs=8, seed=1, shard_size=4,
+                          fractions={"mobilenet": 1.0})
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("factory") / "ds")
+    res = build(out, CFG)
+    return out, res
+
+
+def _shard_bytes(path):
+    out = {}
+    for f in sorted(os.listdir(os.path.join(path, "shards"))):
+        if f.endswith(".npz"):
+            with open(os.path.join(path, "shards", f), "rb") as fh:
+                out[f] = hashlib.sha256(fh.read()).hexdigest()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+def test_plan_deterministic_and_json_clean():
+    p1, p2 = make_plan(CFG), make_plan(CFG)
+    assert p1.plan_hash == p2.plan_hash
+    assert p1.entries == p2.entries
+    # every entry must survive canonical JSON (no numpy scalars)
+    rt = json.loads(json.dumps(p1.to_json()))
+    assert rt["entries"] == p1.entries
+    kinds = {e["kind"] for e in p1.entries}
+    assert kinds == {"zoo", "lm"}
+    assert any(e["family"] == "convnext" for e in p1.entries)
+
+
+def test_plan_hash_sensitive_to_content():
+    assert plan_hash(CFG) != plan_hash(
+        FactoryConfig(**{**CFG.__dict__, "seed": 4}))
+    assert plan_hash(CFG) != plan_hash(
+        FactoryConfig(**{**CFG.__dict__, "noise_sigma": 0.02}))
+
+
+# ---------------------------------------------------------------------------
+# build + streaming reader
+# ---------------------------------------------------------------------------
+
+def test_build_counts_and_manifest(built):
+    out, res = built
+    plan = make_plan(CFG)
+    assert res.n_planned == plan.n_entries
+    assert res.n_built + res.n_skipped == res.n_planned
+    assert res.n_skipped == 0
+    man = read_manifest(out)
+    assert man["version"] == FACTORY_VERSION
+    assert man["plan_hash"] == plan.plan_hash
+    assert len(man["shards"]) == plan.n_shards
+    assert sum(sh["n"] for sh in man["shards"]) == res.n_built
+
+
+def test_streaming_reader_matches_load_dataset(built):
+    out, res = built
+    streamed = list(iter_records(out, verify=True))
+    loaded = load_dataset(out)          # v1 API dispatches to the factory
+    assert len(streamed) == len(loaded) == res.n_built
+    for a, b in zip(streamed, loaded):
+        np.testing.assert_array_equal(a.x, b.x)
+        np.testing.assert_array_equal(a.edges, b.edges)
+        np.testing.assert_array_equal(a.y, b.y)
+        assert a.family == b.family and a.meta == b.meta
+        assert "fingerprint" in a.meta and "plan_index" in a.meta
+
+
+def test_lm_entries_traced(built):
+    out, _ = built
+    lm_recs = [r for r in iter_records(out) if r.family == "mamba2-370m"]
+    assert lm_recs, "plan included an LLM arch but no record was built"
+    for r in lm_recs:
+        assert r.meta.get("kind") == "lm" and "seq" in r.meta
+        assert r.x.shape[1] == 32 and (r.y > 0).all()
+
+
+def test_exact_shard_boundary(tmp_path):
+    out = str(tmp_path / "ds")
+    res = build(out, CFG_EXACT)
+    assert res.n_planned == 8 and res.n_shards == 2
+    man = read_manifest(out)
+    assert [sh["n"] for sh in man["shards"]] == [4, 4]
+    assert len(load_factory_dataset(out)) == 8
+
+
+# ---------------------------------------------------------------------------
+# resume / checksum / kill-mid-build
+# ---------------------------------------------------------------------------
+
+def test_resume_after_partial_build_is_byte_identical(built, tmp_path):
+    ref, _ = built
+    out = str(tmp_path / "ds")
+    partial = build(out, CFG, _stop_after_shards=2)     # "kill" mid-build
+    assert partial.shards_built == 2 and not partial.manifest_path
+    assert not os.path.exists(os.path.join(out, "manifest.json"))
+    resumed = build(out)                                # cfg from plan.json
+    assert resumed.shards_reused == 2
+    assert resumed.shards_built == resumed.n_shards - 2
+    assert _shard_bytes(out) == _shard_bytes(ref)
+    # manifest shard entries match on content (rss telemetry may differ)
+    keep = ("file", "sha256", "bytes", "n", "n_skipped", "plan_range")
+    for a, b in zip(read_manifest(out)["shards"],
+                    read_manifest(ref)["shards"]):
+        assert {k: a[k] for k in keep} == {k: b[k] for k in keep}
+
+
+def test_corrupt_shard_is_rebuilt(built, tmp_path):
+    ref, _ = built
+    out = str(tmp_path / "ds")
+    build(out, CFG)
+    victim = os.path.join(out, "shards", "shard00001.npz")
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    res = build(out, CFG)
+    assert res.shards_built == 1 and res.shards_reused == res.n_shards - 1
+    assert _shard_bytes(out) == _shard_bytes(ref)
+    list(iter_records(out, verify=True))    # checksums all clean again
+
+
+def test_complete_build_is_pure_verification(built):
+    out, res = built
+    again = build(out, CFG)
+    assert again.shards_built == 0
+    assert again.shards_reused == res.n_shards
+    assert again.n_built == res.n_built
+
+
+def test_plan_mismatch_raises(built):
+    out, _ = built
+    with pytest.raises(PlanMismatchError):
+        build(out, FactoryConfig(**{**CFG.__dict__, "seed": 99}))
+
+
+def test_multiworker_build_matches_single(built, tmp_path):
+    ref, _ = built
+    out = str(tmp_path / "ds")
+    res = build(out, CFG, workers=2)
+    assert res.n_built == load_factory_dataset(ref).__len__()
+    assert _shard_bytes(out) == _shard_bytes(ref)
+
+
+# ---------------------------------------------------------------------------
+# structured skips / empty shard
+# ---------------------------------------------------------------------------
+
+def test_failed_traces_become_structured_skips(tmp_path):
+    out = str(tmp_path / "ds")
+    res = build(out, FactoryConfig(n_graphs=4, seed=0, shard_size=4,
+                                   fractions={"nosuchfamily": 1.0}))
+    assert res.n_built == 0 and res.n_skipped == 4
+    assert "nosuchfamily" in res.skips_by_family
+    assert sum(res.skips_by_family["nosuchfamily"].values()) == 4
+    man = read_manifest(out)                 # empty shard still commits
+    assert man["n_built"] == 0 and man["n_skipped"] == 4
+    assert man["skips_by_family"] == res.skips_by_family
+    assert load_factory_dataset(out, verify=True) == []
+
+
+def test_build_dataset_skip_accounting():
+    res = builder.build_dataset(n_graphs=3, seed=0,
+                                fractions={"nosuchfamily": 1.0})
+    assert isinstance(res, DatasetBuildResult)
+    assert len(res) == 0 and res.n_skipped == 3
+    fam = res.skips_by_family()["nosuchfamily"]
+    assert sum(fam.values()) == 3
+    assert all(sk.error for sk in res.skips)
+
+
+def test_save_dataset_manifest_records_skips(tmp_path):
+    res = builder.build_dataset(n_graphs=3, seed=0,
+                                fractions={"mobilenet": 0.5,
+                                           "nosuchfamily": 0.5})
+    assert len(res) >= 1 and res.n_skipped >= 1
+    save_dataset(res, str(tmp_path / "ds"))
+    with open(tmp_path / "ds" / "manifest.json") as f:
+        man = json.load(f)
+    assert man["n_skipped"] == res.n_skipped
+    assert man["skips_by_family"] == res.skips_by_family()
+
+
+# ---------------------------------------------------------------------------
+# builder satellites: handles + version error + stable split
+# ---------------------------------------------------------------------------
+
+def test_load_dataset_closes_npz_handles(built, tmp_path, monkeypatch):
+    recs = load_factory_dataset(built[0])[:4]
+    save_dataset(recs, str(tmp_path / "v1ds"))
+
+    opened = []
+    real_load = np.load
+
+    def tracking_load(*a, **kw):
+        npz = real_load(*a, **kw)
+        opened.append(npz)
+        return npz
+
+    monkeypatch.setattr(np, "load", tracking_load)
+    back = load_dataset(str(tmp_path / "v1ds"))
+    assert len(back) == 4 and len(opened) >= 1
+    for npz in opened:
+        assert npz.fid is None or npz.fid.closed
+
+
+def test_version_mismatch_error_names_both_versions(tmp_path):
+    os.makedirs(tmp_path / "ds")
+    with open(tmp_path / "ds" / "manifest.json", "w") as f:
+        json.dump({"version": "dippm-ds-v99", "shards": []}, f)
+    with pytest.raises(ValueError, match=r"dippm-ds-v99.*dippm-ds-v1"):
+        load_dataset(str(tmp_path / "ds"))
+
+
+def _fake_records(n, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        nn = int(rng.integers(4, 12))
+        recs.append(DatasetRecord(
+            x=rng.standard_normal((nn, 32)).astype(np.float32),
+            edges=np.asarray([(j, j + 1) for j in range(nn - 1)], np.int32),
+            static=rng.standard_normal(5).astype(np.float32),
+            y=(rng.random(3) * 50 + 1).astype(np.float32),
+            family=f"fam{i % 3}", n_nodes=nn))
+    return recs
+
+
+def test_split_membership_stable_under_growth():
+    recs = _fake_records(60)
+    small = split_dataset(recs[:20], seed=0, holdout_families=())
+    big = split_dataset(recs, seed=0, holdout_families=())
+    member = {}
+    for name in ("train", "val", "test"):
+        for r in big[name]:
+            member[id(r)] = name
+    for name in ("train", "val", "test"):
+        for r in small[name]:
+            assert member[id(r)] == name, \
+                "growing the dataset moved an existing record across splits"
+
+
+def test_split_uses_fingerprint_when_present(built):
+    recs = load_factory_dataset(built[0])
+    for r in recs:
+        assert record_fingerprint(r) == r.meta["fingerprint"]
+    # assignment is a pure function of (fingerprint, seed)
+    fp = record_fingerprint(recs[0])
+    assert split_assignment(fp, 0) == split_assignment(fp, 0)
+    assert any(split_assignment(record_fingerprint(r), 0)
+               != split_assignment(record_fingerprint(r), 1) for r in recs)
+
+
+def test_split_is_partition_with_holdout(built):
+    recs = load_factory_dataset(built[0])
+    sp = split_dataset(recs, seed=0)
+    n = sum(len(v) for v in sp.values())
+    assert n == len(recs)
+    assert all(r.family == "convnext" for r in sp["unseen"])
+    assert all(r.family != "convnext"
+               for k in ("train", "val", "test") for r in sp[k])
